@@ -1,0 +1,62 @@
+"""Shared benchmark utilities: matrix generators (ER / R-MAT), timing."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sparse as S
+
+
+def er_matrix(rng, m, n, d, cap=None):
+    """Erdős–Rényi: d nonzeros per column uniformly at random."""
+    nnz = d * n
+    rows = rng.integers(0, m, size=nnz)
+    cols = np.repeat(np.arange(n), d)
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    dense = np.zeros((m, n), np.float32)
+    np.add.at(dense, (rows, cols), vals)
+    return S.from_dense(jnp.asarray(dense), cap=cap or nnz)
+
+
+def rmat_matrix(rng, m, n, d, cap=None, a=0.57, b=0.19, c=0.19):
+    """R-MAT power-law rows (Graph500 seeds): skewed nonzero distribution."""
+    nnz = d * n
+    scale = int(np.ceil(np.log2(max(m, 2))))
+    rows = np.zeros(nnz, np.int64)
+    for _ in range(scale):
+        rows <<= 1
+        r = rng.random(nnz)
+        rows |= (r > a + b).astype(np.int64)  # biased bit per level
+    rows = rows % m
+    cols = rng.integers(0, n, size=nnz)
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    dense = np.zeros((m, n), np.float32)
+    np.add.at(dense, (rows, cols), vals)
+    return S.from_dense(jnp.asarray(dense), cap=cap or nnz)
+
+
+def gen_collection(kind, k, m, n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    gen = er_matrix if kind == "er" else rmat_matrix
+    return [gen(rng, m, n, d) for _ in range(k)]
+
+
+def time_fn(fn, *args, warmup=1, iters=5):
+    """Median wall time of a jitted callable in microseconds."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}", flush=True)

@@ -1,0 +1,39 @@
+"""Fig. 2 analogue: best-performing algorithm per (k, d) cell.
+
+The paper's finding: hash/sliding-hash (here: spa/sorted — the TPU-native
+one-touch accumulators) win everywhere for ER; 2-way tree only competes at
+very small k on skewed (RMAT) inputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from benchmarks.common import emit, gen_collection, time_fn
+from repro.core.spkadd import spkadd
+
+ALGOS = ["incremental", "tree", "sorted", "spa"]
+
+
+def main(m=1024, n=16):
+    for kind in ("er", "rmat"):
+        grid = {}
+        for k in (2, 4, 8, 16, 32):
+            for d in (4, 16, 64):
+                mats = gen_collection(kind, k, m, n, d, seed=k * 7 + d)
+                best, best_us = None, float("inf")
+                for alg in ALGOS:
+                    fn = jax.jit(functools.partial(spkadd, algorithm=alg))
+                    us = time_fn(fn, mats, iters=3)
+                    if us < best_us:
+                        best, best_us = alg, us
+                grid[(k, d)] = best
+                emit(f"fig2_{kind}/best/k={k}/d={d}", best_us, best)
+        kway_wins = sum(1 for v in grid.values() if v in ("sorted", "spa"))
+        emit(f"fig2_{kind}/kway_win_fraction", 100.0 * kway_wins / len(grid),
+             "paper: hash family wins almost all cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Fig. 3 / Table I analogue: empirical work-scaling in k.
+
+The paper's strong-scaling figure is thread-count scaling on a 48-core node;
+this container has one core, so we verify the *work* columns of Table I
+instead: fit runtime ~ k^alpha per algorithm. Expected exponents:
+incremental ≈ 2, tree ≈ 1 (·lg k), sorted/spa ≈ 1.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, gen_collection, time_fn
+from repro.core.spkadd import spkadd
+
+
+def main(m=2048, n=16, d=16, ks=(2, 4, 8, 16, 32)):
+    for alg in ["incremental", "tree", "sorted", "spa"]:
+        times = []
+        for k in ks:
+            mats = gen_collection("er", k, m, n, d, seed=k)
+            fn = jax.jit(functools.partial(spkadd, algorithm=alg))
+            us = time_fn(fn, mats, iters=3)
+            times.append(us)
+            emit(f"fig3/{alg}/k={k}", us)
+        alpha = np.polyfit(np.log(ks), np.log(times), 1)[0]
+        expect = {"incremental": "~2", "tree": "~1·lgk", "sorted": "~1",
+                  "spa": "~1"}[alg]
+        emit(f"fig3/{alg}/scaling_exponent", alpha, f"expected {expect}")
+
+
+if __name__ == "__main__":
+    main()

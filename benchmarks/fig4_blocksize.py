@@ -1,0 +1,35 @@
+"""Fig. 4 analogue: optimum accumulator block size for the sliding SPA.
+
+The paper sweeps hash-table sizes and finds the optimum at the cache size;
+here the fast memory is the VMEM budget: sweep block_rows (⇒ parts =
+ceil(m/block)) and report runtime. On TPU the minimum sits where the tile
+fits VMEM; in interpret mode the trend still shows the parts-vs-locality
+trade (too-small blocks pay per-part stream passes — exactly Alg. 7 line 8).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, gen_collection, time_fn
+from repro.core.sparse import concat
+from repro.kernels import ops
+
+
+def main(m=4096, n=8, k=8, d=32):
+    mats = gen_collection("er", k, m, n, d, seed=3)
+    cat = concat(mats)
+    for block_rows in (64, 128, 256, 512, 1024, 2048, 4096):
+        parts = (m + block_rows - 1) // block_rows
+        fn = jax.jit(functools.partial(
+            ops.spa_accumulate, m=m, n=n, block_rows=block_rows, chunk=1024))
+        us = time_fn(fn, cat.keys, cat.vals, iters=3)
+        vmem_kib = block_rows * n * 4 / 1024
+        emit(f"fig4/block_rows={block_rows}", us,
+             f"parts={parts};tile={vmem_kib:.0f}KiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Benchmark harness front door: one module per paper table/figure.
+
+``python -m benchmarks.run [--only NAME] [--quick]`` prints
+``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
+
+Paper artifact -> module:
+  Table III (ER runtimes)        table34_algorithms.run('er')
+  Table IV  (RMAT runtimes)      table34_algorithms.run('rmat')
+  Fig. 2    (best-algo regions)  fig2_regions
+  Fig. 3    (scaling)            fig3_scaling (work-scaling exponents)
+  Fig. 4    (hash-table size)    fig4_blocksize (VMEM tile sweep)
+  Fig. 6    (SpGEMM impact)      fig6_spgemm (4-device sparse SUMMA)
+  §I DL use-case                 sparse_allreduce_bytes (8-device DP)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--skip-multidevice", action="store_true",
+                    help="skip benches that spawn multi-device subprocesses")
+    args = ap.parse_args()
+
+    from benchmarks import (fig2_regions, fig3_scaling, fig4_blocksize,
+                            fig6_spgemm, kv_quant_roofline,
+                            sparse_allreduce_bytes, table34_algorithms)
+
+    jobs = {
+        "table3_er": lambda: table34_algorithms.run("er"),
+        "table4_rmat": lambda: table34_algorithms.run("rmat"),
+        "fig2_regions": fig2_regions.main,
+        "fig3_scaling": fig3_scaling.main,
+        "fig4_blocksize": fig4_blocksize.main,
+        "fig6_spgemm": fig6_spgemm.main,
+        "sparse_allreduce": sparse_allreduce_bytes.main,
+        "kv_quant_roofline": kv_quant_roofline.main,
+    }
+    multidev = {"fig6_spgemm", "sparse_allreduce"}
+
+    failures = []
+    for name, fn in jobs.items():
+        if args.only and args.only != name:
+            continue
+        if args.skip_multidevice and name in multidev:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        sys.exit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Tables III & IV analogue: SpKAdd runtime by algorithm × k × d, for ER and
+RMAT sparsity patterns.
+
+The paper's tables are 48-core wall times; here the claim under test is the
+*relative ordering and scaling*: k-way one-touch algorithms (spa/sorted) beat
+2-way tree, which beats 2-way incremental, with the gap widening in k — the
+work columns of Table I.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from benchmarks.common import emit, gen_collection, time_fn
+from repro.core.spkadd import spkadd
+
+ALGOS = ["incremental", "tree", "sorted", "spa"]
+KERNEL_ALGOS = ["blocked_spa", "hash"]
+
+
+def run(kind: str, m=2048, n=32, ks=(4, 16, 64), ds=(4, 16, 64),
+        include_kernels=False):
+    rows = {}
+    for k in ks:
+        for d in ds:
+            mats = gen_collection(kind, k, m, n, d, seed=k * 100 + d)
+            algos = ALGOS + (KERNEL_ALGOS if include_kernels else [])
+            for alg in algos:
+                fn = jax.jit(functools.partial(spkadd, algorithm=alg))
+                us = time_fn(fn, mats)
+                rows[(alg, k, d)] = us
+                emit(f"table_{kind}/{alg}/k={k}/d={d}", us,
+                     f"nnz_in={k * d * n}")
+    # derived: ratio of incremental to sorted at max k (the paper's headline)
+    kmax, dmid = max(ks), ds[len(ds) // 2]
+    if ("incremental", kmax, dmid) in rows:
+        ratio = rows[("incremental", kmax, dmid)] / rows[("sorted", kmax, dmid)]
+        emit(f"table_{kind}/ratio_incremental_vs_sorted_k{kmax}", ratio,
+             "paper: >5x for large k")
+    return rows
+
+
+def main():
+    run("er")
+    run("rmat")
+
+
+if __name__ == "__main__":
+    main()

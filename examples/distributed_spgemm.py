@@ -1,0 +1,60 @@
+"""Distributed SpGEMM (sparse SUMMA) with SpKAdd reduction — paper Fig. 5/6.
+
+Spawns itself with 4 fake devices if needed, multiplies two sparse matrices
+on a 2×2 process grid, and compares reduction algorithms.
+
+Run: PYTHONPATH=src python examples/distributed_spgemm.py
+"""
+import os
+import subprocess
+import sys
+
+
+def run():
+    import functools
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.spgemm import spgemm_summa
+
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    rng = np.random.default_rng(0)
+    M, K, N = 512, 512, 256
+
+    def sprand(m, n, frac=0.05):
+        d = np.zeros((m, n), np.float32)
+        nz = int(m * n * frac)
+        idx = rng.choice(m * n, nz, replace=False)
+        d.flat[idx] = rng.standard_normal(nz)
+        return jnp.asarray(d)
+
+    A, B = sprand(M, K), sprand(K, N)
+    ref = np.asarray(A) @ np.asarray(B)
+    print(f"C = A({M}x{K}, 5% dense) @ B({K}x{N}) on a 2x2 SUMMA grid")
+    for alg in ["incremental", "tree", "sorted", "spa"]:
+        fn = jax.jit(functools.partial(spgemm_summa, mesh=mesh, algorithm=alg))
+        C = fn(A, B)
+        jax.block_until_ready(C)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(A, B))
+        dt = time.perf_counter() - t0
+        err = float(np.abs(np.asarray(C) - ref).max())
+        print(f"  reduction={alg:12s} {dt*1e3:8.1f} ms  max|err|={err:.2e}")
+    print("note: a 2x2 grid gives only k=2 partials per process, where all "
+          "schedules converge by construction; the paper's 2x SpGEMM win "
+          "comes from the k-scaling measured in benchmarks/table34 (21x at "
+          "k=64) — at the dry-run's 16x16 grid the reduction is 16-way.")
+
+
+if __name__ == "__main__":
+    if len(jax.devices()) < 4 if "jax" in sys.modules else True:
+        if os.environ.get("_SPGEMM_CHILD") != "1":
+            env = dict(os.environ)
+            env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+            env["_SPGEMM_CHILD"] = "1"
+            sys.exit(subprocess.run([sys.executable, __file__], env=env).returncode)
+    import jax  # noqa: E402
+    run()

@@ -1,0 +1,3 @@
+"""repro — SpKAdd (parallel sparse-matrix collection addition) as a
+multi-pod JAX training/serving framework. See README.md."""
+__version__ = "1.0.0"

@@ -1,0 +1,128 @@
+"""Mesh-agnostic sharded checkpointing with elastic restore.
+
+Layout: ``<dir>/step_<n>/{manifest.json, <leaf-id>.npy...}``. Leaves are
+written as *global* arrays (device_get assembles shards), so a checkpoint
+taken on one mesh restores onto any other — ``restore_checkpoint`` re-shards
+via device_put with the target shardings (elastic scaling: lose a pod,
+relaunch on the smaller mesh, restore, continue). A ``.complete`` marker makes
+partially-written checkpoints invisible to ``latest_step`` (crash-safe).
+
+``AsyncCheckpointer`` overlaps the host write with training (one background
+thread, latest-wins queue of depth 1), the standard hide-the-checkpoint-cost
+trick; ``save_on_signal`` installs a SIGTERM hook for preemption checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import signal
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    manifest = {"step": step, "treedef": str(treedef), "n_leaves": len(leaves),
+                "dtypes": [], "shapes": []}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        manifest["dtypes"].append(str(arr.dtype))
+        manifest["shapes"].append(list(arr.shape))
+        np.save(os.path.join(path, f"leaf_{i:05d}.npy"), arr)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(path, ".complete"), "w") as f:
+        f.write("ok")
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and \
+                os.path.exists(os.path.join(ckpt_dir, name, ".complete")):
+            steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like: Any,
+                       shardings: Any = None) -> Any:
+    """Restore into the structure of ``like``; re-shard onto ``shardings``
+    (a pytree of NamedSharding matching ``like``) when given — this is the
+    elastic path: the stored global arrays don't care about the old mesh."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    leaves, treedef = _flatten(like)
+    shard_leaves = (treedef.flatten_up_to(shardings)
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    for i, (leaf, shd) in enumerate(zip(leaves, shard_leaves)):
+        arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))
+        else:
+            out.append(jax.device_put(arr))
+    return treedef.unflatten(out)
+
+
+class AsyncCheckpointer:
+    """Depth-1 latest-wins async writer; ``save`` returns immediately."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        self._q: "queue.Queue" = queue.Queue(maxsize=1)
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree = item
+            try:
+                save_checkpoint(self.ckpt_dir, step, tree)
+            except BaseException as e:  # surfaced on next save/close
+                self._err = e
+
+    def save(self, step: int, tree: Any) -> None:
+        if self._err:
+            raise self._err
+        # device_get NOW so training can mutate buffers afterwards
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        try:
+            self._q.put_nowait((step, host_tree))
+        except queue.Full:
+            _ = self._q.get_nowait()  # drop the stale pending save
+            self._q.put_nowait((step, host_tree))
+
+    def close(self):
+        self._q.put(None)
+        self._thread.join()
+        if self._err:
+            raise self._err
+
+
+def save_on_signal(ckpt_dir: str, get_state, signum=signal.SIGTERM):
+    """Preemption hook: on ``signum`` write a final checkpoint then re-raise
+    the default behaviour. ``get_state`` -> (step, tree)."""
+    def handler(sig, frame):
+        step, tree = get_state()
+        save_checkpoint(ckpt_dir, step, tree)
+        signal.signal(sig, signal.SIG_DFL)
+        os.kill(os.getpid(), sig)
+
+    signal.signal(signum, handler)

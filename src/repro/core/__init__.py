@@ -1,0 +1,30 @@
+"""repro.core — the paper's contribution: SpKAdd and its integrations.
+
+Public API:
+- sparse.PaddedCOO and constructors
+- spkadd.spkadd(mats, algorithm=...) and the algorithm family
+- topk: gradient sparsification + error feedback
+- allreduce: sparse allreduce schedules (SpKAdd in the collective)
+- spgemm: distributed sparse SUMMA with SpKAdd reduction
+"""
+from repro.core.sparse import (PaddedCOO, from_coords, from_dense, make_empty,
+                               compress, concat, sort_by_key, with_capacity)
+from repro.core.spkadd import (ALGORITHMS, spkadd, spkadd_incremental,
+                               spkadd_tree, spkadd_sorted, spkadd_spa,
+                               spkadd_spa_dense, spkadd_blocked_spa,
+                               spkadd_hash, symbolic_nnz,
+                               symbolic_nnz_per_column, two_way_add)
+from repro.core.topk import (SparseUpdate, topk_global, topk_block, densify,
+                             sparsify_with_feedback)
+from repro.core.allreduce import (sparse_allreduce, compressed_gradient_mean,
+                                  SCHEDULES)
+
+__all__ = [
+    "PaddedCOO", "from_coords", "from_dense", "make_empty", "compress",
+    "concat", "sort_by_key", "with_capacity", "ALGORITHMS", "spkadd",
+    "spkadd_incremental", "spkadd_tree", "spkadd_sorted", "spkadd_spa",
+    "spkadd_spa_dense", "spkadd_blocked_spa", "spkadd_hash", "symbolic_nnz",
+    "symbolic_nnz_per_column", "two_way_add", "SparseUpdate", "topk_global",
+    "topk_block", "densify", "sparsify_with_feedback", "sparse_allreduce",
+    "compressed_gradient_mean", "SCHEDULES",
+]

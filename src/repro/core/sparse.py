@@ -1,0 +1,198 @@
+"""Static-shape sparse containers for SpKAdd on XLA.
+
+JAX/XLA require static shapes, so sparse matrices are stored as *padded* COO:
+fixed-capacity index/value arrays plus a dynamic ``nnz`` scalar. Invalid slots
+carry a sentinel key and a value of exactly 0.0 — every op in this module
+preserves that invariant, which is what makes segment-sum-based compaction
+safe (padding contributes nothing wherever it lands).
+
+Keys are linearized in CSC order (``key = col * m + row``) to match the
+paper's column-major traversal; a sorted PaddedCOO is therefore sorted the way
+the paper's ColAdd expects its inputs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def sentinel_key(shape: Tuple[int, int]) -> int:
+    """Key strictly greater than any valid linearized (row, col)."""
+    m, n = shape
+    return m * n
+
+
+class PaddedCOO(NamedTuple):
+    """Fixed-capacity COO sparse matrix (CSC-ordered keys).
+
+    Fields
+    ------
+    keys : int32[cap]   linearized ``col*m + row``; ``m*n`` marks padding
+    vals : float[cap]   0.0 in padding slots (invariant)
+    nnz  : int32[]      number of valid leading-or-scattered entries
+    shape: (m, n)       static logical shape (not traced)
+    """
+
+    keys: jax.Array
+    vals: jax.Array
+    nnz: jax.Array
+    shape: Tuple[int, int]
+
+    @property
+    def cap(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def rows(self) -> jax.Array:
+        m, _ = self.shape
+        return jnp.where(self.valid_mask(), self.keys % m, m)
+
+    @property
+    def cols(self) -> jax.Array:
+        m, n = self.shape
+        return jnp.where(self.valid_mask(), self.keys // m, n)
+
+    def valid_mask(self) -> jax.Array:
+        return self.keys != sentinel_key(self.shape)
+
+    def to_dense(self) -> jax.Array:
+        m, n = self.shape
+        flat = jnp.zeros((m * n,), dtype=self.vals.dtype)
+        k = jnp.where(self.valid_mask(), self.keys, 0)
+        v = jnp.where(self.valid_mask(), self.vals, 0.0)
+        flat = flat.at[k].add(v)
+        return flat.reshape(n, m).T  # keys are col-major
+
+
+def make_empty(shape: Tuple[int, int], cap: int, dtype=jnp.float32) -> PaddedCOO:
+    sent = sentinel_key(shape)
+    return PaddedCOO(
+        keys=jnp.full((cap,), sent, dtype=jnp.int32),
+        vals=jnp.zeros((cap,), dtype=dtype),
+        nnz=jnp.zeros((), dtype=jnp.int32),
+        shape=shape,
+    )
+
+
+def from_coords(rows: jax.Array, cols: jax.Array, vals: jax.Array,
+                shape: Tuple[int, int], nnz=None) -> PaddedCOO:
+    """Build from (row, col, val) arrays; all entries assumed valid unless
+    ``nnz`` is given, in which case trailing slots are padded out."""
+    m, n = shape
+    cap = rows.shape[0]
+    keys = cols.astype(jnp.int32) * m + rows.astype(jnp.int32)
+    if nnz is None:
+        nnz = jnp.asarray(cap, dtype=jnp.int32)
+    else:
+        nnz = jnp.asarray(nnz, dtype=jnp.int32)
+    idx = jnp.arange(cap)
+    valid = idx < nnz
+    keys = jnp.where(valid, keys, sentinel_key(shape))
+    vals = jnp.where(valid, vals, 0.0)
+    return PaddedCOO(keys=keys, vals=vals.astype(vals.dtype), nnz=nnz, shape=shape)
+
+
+def from_dense(dense: jax.Array, cap: int) -> PaddedCOO:
+    """Dense -> PaddedCOO keeping at most ``cap`` nonzeros (all, if they fit).
+
+    Selection is by |value| via top_k so truncation (if any) keeps the heavy
+    entries; with cap >= nnz(dense) this is exact.
+    """
+    m, n = dense.shape
+    flat = dense.T.reshape(-1)  # col-major to match keys
+    absv = jnp.abs(flat)
+    k = min(cap, m * n)
+    _, idx = jax.lax.top_k(absv, k)
+    v = flat[idx]
+    valid = v != 0.0
+    keys = jnp.where(valid, idx.astype(jnp.int32), sentinel_key((m, n)))
+    vals = jnp.where(valid, v, 0.0)
+    nnz = valid.sum().astype(jnp.int32)
+    # keep sorted by key for the merge-based algorithms
+    order = jnp.argsort(keys)
+    out = PaddedCOO(keys=keys[order], vals=vals[order], nnz=nnz, shape=(m, n))
+    if cap > k:
+        out = with_capacity(out, cap)
+    return out
+
+
+def sort_by_key(a: PaddedCOO) -> PaddedCOO:
+    order = jnp.argsort(a.keys)
+    return a._replace(keys=a.keys[order], vals=a.vals[order])
+
+
+def compress(a: PaddedCOO) -> PaddedCOO:
+    """Combine duplicate keys (sort + segment-sum). Output is key-sorted.
+
+    This is the static-shape analogue of the paper's output construction: the
+    capacity stays ``a.cap`` (the symbolic bound), ``nnz`` becomes the exact
+    count of distinct keys.
+    """
+    sent = sentinel_key(a.shape)
+    order = jnp.argsort(a.keys)
+    k_s = a.keys[order]
+    v_s = a.vals[order]
+    valid = k_s != sent
+    first = jnp.concatenate([jnp.ones((1,), bool), k_s[1:] != k_s[:-1]])
+    is_new = first & valid
+    # group id for every slot; padding inherits the last group but adds 0.0
+    gid = jnp.cumsum(is_new) - 1
+    gid = jnp.clip(gid, 0, a.cap - 1)
+    out_vals = jax.ops.segment_sum(v_s, gid, num_segments=a.cap)
+    out_keys = jnp.full((a.cap,), sent, dtype=jnp.int32)
+    scatter_idx = jnp.where(is_new, gid, a.cap)  # index a.cap drops out of range
+    out_keys = out_keys.at[scatter_idx].set(k_s, mode="drop")
+    nnz = is_new.sum().astype(jnp.int32)
+    # zero padding values beyond nnz (groups past nnz hold only padding sums)
+    slot = jnp.arange(a.cap)
+    out_vals = jnp.where(slot < nnz, out_vals, 0.0)
+    return PaddedCOO(keys=out_keys, vals=out_vals, nnz=nnz, shape=a.shape)
+
+
+def concat(mats, total_cap: int | None = None) -> PaddedCOO:
+    """Concatenate k PaddedCOOs of identical logical shape (no dedup)."""
+    shape = mats[0].shape
+    for a in mats:
+        assert a.shape == shape, "SpKAdd inputs must share a logical shape"
+    keys = jnp.concatenate([a.keys for a in mats])
+    vals = jnp.concatenate([a.vals for a in mats])
+    nnz = functools.reduce(lambda x, y: x + y, [a.nnz for a in mats])
+    out = PaddedCOO(keys=keys, vals=vals, nnz=nnz, shape=shape)
+    if total_cap is not None and total_cap != out.cap:
+        out = with_capacity(out, total_cap)
+    return out
+
+
+def with_capacity(a: PaddedCOO, cap: int) -> PaddedCOO:
+    """Grow (pad) or shrink (sorted-truncate) to a new capacity."""
+    sent = sentinel_key(a.shape)
+    if cap == a.cap:
+        return a
+    if cap > a.cap:
+        pad = cap - a.cap
+        return PaddedCOO(
+            keys=jnp.concatenate([a.keys, jnp.full((pad,), sent, jnp.int32)]),
+            vals=jnp.concatenate([a.vals, jnp.zeros((pad,), a.vals.dtype)]),
+            nnz=a.nnz,
+            shape=a.shape,
+        )
+    s = sort_by_key(a)  # valid keys first
+    return PaddedCOO(keys=s.keys[:cap], vals=s.vals[:cap], nnz=jnp.minimum(a.nnz, cap),
+                     shape=a.shape)
+
+
+def allclose(a: PaddedCOO, b: PaddedCOO, rtol=1e-5, atol=1e-6) -> bool:
+    """Dense-equality check used by tests (host-side convenience)."""
+    return bool(np.allclose(np.asarray(a.to_dense()), np.asarray(b.to_dense()),
+                            rtol=rtol, atol=atol))
+
+
+jax.tree_util.register_pytree_node(
+    PaddedCOO,
+    lambda a: ((a.keys, a.vals, a.nnz), a.shape),
+    lambda shape, leaves: PaddedCOO(leaves[0], leaves[1], leaves[2], shape),
+)

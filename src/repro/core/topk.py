@@ -1,0 +1,81 @@
+"""Top-k gradient sparsification with error feedback.
+
+This is the paper's deep-learning motivation (§I): "algorithmic sparsification
+of the gradient updates" turns the DP gradient reduction into an SpKAdd of k
+sparse matrices (one per worker). Two selectors:
+
+- ``topk_global``: exact top-k by |value| over the flat tensor (lax.top_k).
+- ``topk_block``: top-(k/blocks) within fixed-size blocks — the form real
+  systems ship (bounded sort width, vectorizes on TPU; cf. SparCML's
+  block-sparsification). Slightly different support, same budget.
+
+Error feedback (EF14/EF21 family): the un-transmitted residual is carried into
+the next step so compression error doesn't bias the descent direction.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SparseUpdate(NamedTuple):
+    """Flat sparse tensor update: fixed-width (idx, val) streams."""
+    idx: jax.Array   # int32[k], position in the flat tensor; size marks pad
+    val: jax.Array   # float[k], 0 in pad slots
+    size: int        # static: flat tensor length
+
+
+jax.tree_util.register_pytree_node(
+    SparseUpdate,
+    lambda u: ((u.idx, u.val), u.size),
+    lambda size, leaves: SparseUpdate(leaves[0], leaves[1], size),
+)
+
+
+def topk_global(x: jax.Array, k: int) -> SparseUpdate:
+    flat = x.reshape(-1)
+    k = min(k, flat.shape[0])
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return SparseUpdate(idx.astype(jnp.int32), flat[idx], flat.shape[0])
+
+
+def topk_block(x: jax.Array, k: int, block: int = 4096) -> SparseUpdate:
+    """Per-block top-k; total budget ~= k (rounded to a block multiple)."""
+    flat = x.reshape(-1)
+    size = flat.shape[0]
+    if size <= block or k >= size:
+        return topk_global(x, k)
+    nb = (size + block - 1) // block
+    pad = nb * block - size
+    xp = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)]).reshape(nb, block)
+    per = max(1, k // nb)
+    _, idx = jax.lax.top_k(jnp.abs(xp), per)
+    base = (jnp.arange(nb) * block)[:, None]
+    flat_idx = (base + idx).reshape(-1)
+    valid = flat_idx < size
+    flat_idx = jnp.where(valid, flat_idx, size)
+    vals = jnp.where(valid, xp.reshape(-1)[jnp.clip(flat_idx, 0, nb * block - 1)], 0.0)
+    return SparseUpdate(flat_idx.astype(jnp.int32), vals, size)
+
+
+def densify(u: SparseUpdate) -> jax.Array:
+    out = jnp.zeros((u.size + 1,), u.val.dtype)
+    out = out.at[jnp.clip(u.idx, 0, u.size)].add(u.val)
+    return out[: u.size]
+
+
+def sparsify_with_feedback(grad: jax.Array, residual: jax.Array, k: int,
+                           selector: str = "global",
+                           block: int = 4096) -> Tuple[SparseUpdate, jax.Array]:
+    """EF: compress (grad + residual); return update + new residual."""
+    corrected = grad.reshape(-1) + residual
+    if selector == "global":
+        u = topk_global(corrected, k)
+    elif selector == "block":
+        u = topk_block(corrected, k, block=block)
+    else:
+        raise ValueError(f"unknown selector {selector!r}")
+    new_residual = corrected - densify(u)
+    return u, new_residual

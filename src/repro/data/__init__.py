@@ -1,0 +1,2 @@
+from repro.data.synthetic import (make_batch, input_specs, decode_inputs,
+                                  batch_for_shape)

@@ -1,0 +1,87 @@
+"""Deterministic synthetic data pipeline + dry-run input specs.
+
+``make_batch`` produces real arrays (smoke tests / example training runs) —
+deterministic in (arch, shape, step) so restarts resume byte-identically
+without data-loader state. ``input_specs`` produces ShapeDtypeStruct
+stand-ins for the dry-run: weak-type-correct, shardable, no allocation.
+
+Modality frontends are stubs per the assignment: [audio] gets frame
+embeddings (B, n_frames, d); [vlm] gets patch/token embeddings (B, S, d) plus
+3-stream M-RoPE positions.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig, ShapeConfig
+
+
+def _rng(cfg: ModelConfig, shape: ShapeConfig, step: int) -> np.random.Generator:
+    seed = abs(hash((cfg.arch_id, shape.name, step))) % (2 ** 31)
+    return np.random.default_rng(seed)
+
+
+def batch_for_shape(cfg: ModelConfig, shape: ShapeConfig,
+                    batch_override: int | None = None,
+                    seq_override: int | None = None):
+    B = batch_override or shape.global_batch
+    S = seq_override or shape.seq_len
+    return B, S
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, step: int = 0,
+               batch_override: int | None = None,
+               seq_override: int | None = None) -> Dict[str, jax.Array]:
+    """Training batch (kind='train') as concrete arrays."""
+    B, S = batch_for_shape(cfg, shape, batch_override, seq_override)
+    rng = _rng(cfg, shape, step)
+    toks = rng.integers(0, cfg.vocab, size=(B, S + 1), dtype=np.int32)
+    batch: Dict[str, jax.Array] = {
+        "tokens": jnp.asarray(toks[:, :-1]),
+        "labels": jnp.asarray(toks[:, 1:]),
+    }
+    if cfg.family == "encdec":
+        batch["embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_frames, cfg.d_model)).astype(np.float32),
+            dtype=cfg.cdtype)
+    elif cfg.family == "vlm":
+        batch["embeds"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.d_model)).astype(np.float32),
+            dtype=cfg.cdtype)
+        pos = np.broadcast_to(np.arange(S, dtype=np.int32), (3, B, S))
+        batch["mrope_positions"] = jnp.asarray(pos.copy())
+        del batch["tokens"]
+    return batch
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a train/prefill
+    step (decode adds caches via ``decode_inputs``)."""
+    B, S = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    specs: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": sd((B, S), jnp.int32),
+        "labels": sd((B, S), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        specs["embeds"] = sd((B, cfg.n_frames, cfg.d_model), cfg.cdtype)
+    elif cfg.family == "vlm":
+        specs["embeds"] = sd((B, S, cfg.d_model), cfg.cdtype)
+        specs["mrope_positions"] = sd((3, B, S), jnp.int32)
+        del specs["tokens"]
+    if shape.kind != "train":
+        del specs["labels"]
+    return specs
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig, model):
+    """(cache_specs, token_spec) for a decode cell: cache shapes from
+    eval_shape of the model's init_cache (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(lambda: model.init_cache(B, S))
+    tokens = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return caches, tokens

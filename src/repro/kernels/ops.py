@@ -1,0 +1,85 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These handle padding/alignment (chunk multiples, row-block multiples, power-of
+-two tables) and the compaction from raw kernel outputs back to the PaddedCOO
+calling convention, so callers never see kernel launch geometry.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import hash_accum as _hash
+from repro.kernels import spa_accum as _spa
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def choose_block_rows(m: int, n: int, vmem_budget_bytes: int,
+                      dtype_bytes: int = 4, lane_mult: int = 8) -> int:
+    """Paper Alg. 7 line 3, with M := VMEM: parts = ceil(rows·n·b / M);
+    block_rows = ceil(m / parts), rounded to the sublane multiple."""
+    budget_rows = max(1, vmem_budget_bytes // max(1, n * dtype_bytes))
+    block = min(m, budget_rows)
+    return max(lane_mult, _round_up(block, lane_mult) if block >= lane_mult
+               else lane_mult)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n", "block_rows",
+                                             "vmem_budget_bytes", "chunk",
+                                             "interpret"))
+def spa_accumulate(keys: jax.Array, vals: jax.Array, *, m: int, n: int,
+                   block_rows: int | None = None,
+                   vmem_budget_bytes: int = 16 * 1024 * 1024,
+                   chunk: int = _spa.DEFAULT_CHUNK,
+                   interpret: bool = True) -> jax.Array:
+    """Sliding blocked-SPA accumulate -> dense (m, n) f32.
+
+    Pads the input stream to a chunk multiple (sentinel keys) and the row
+    space to a block multiple, launches the sliding kernel, crops the result.
+    """
+    if block_rows is None:
+        block_rows = choose_block_rows(m, n, vmem_budget_bytes)
+    block_rows = min(block_rows, _round_up(m, 8))
+    cap = keys.shape[0]
+    cap_pad = _round_up(max(cap, 1), chunk)
+    sent = jnp.int32(m * n)  # dropped in-kernel (keys < m*n is the test)
+    keys_p = jnp.full((cap_pad,), sent, jnp.int32).at[:cap].set(
+        jnp.where(keys < m * n, keys, sent))
+    vals_p = jnp.zeros((cap_pad,), jnp.float32).at[:cap].set(
+        jnp.where(keys < m * n, vals.astype(jnp.float32), 0.0))
+    return _spa.spa_accumulate_raw(keys_p, vals_p, m=m, n=n,
+                                   block_rows=block_rows, chunk=chunk,
+                                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("sent", "table_size", "interpret"))
+def hash_accumulate(keys: jax.Array, vals: jax.Array, *, sent: int,
+                    table_size: int | None = None, interpret: bool = True):
+    """Faithful hash SpKAdd -> (keys[cap], vals[cap], nnz), key-compacted.
+
+    The raw VMEM table is compacted by moving occupied slots to the front
+    (stable sort on emptiness), then truncated/padded to the input capacity.
+    """
+    cap = keys.shape[0]
+    tkeys, tvals = _hash.hash_accumulate_raw(keys, vals, sent=sent,
+                                             table_size=table_size,
+                                             interpret=interpret)
+    occupied = tkeys != -1
+    order = jnp.argsort(jnp.logical_not(occupied), stable=True)
+    ck = jnp.where(occupied[order], tkeys[order], sent)[:cap]
+    cv = jnp.where(occupied[order], tvals[order], 0.0)[:cap]
+    nnz = occupied.sum().astype(jnp.int32)
+    return ck.astype(jnp.int32), cv, nnz
+
+
+@functools.partial(jax.jit, static_argnames=("sent", "table_size", "interpret"))
+def hash_symbolic(keys: jax.Array, *, sent: int, table_size: int | None = None,
+                  interpret: bool = True) -> jax.Array:
+    """Faithful symbolic phase (distinct-key count)."""
+    return _hash.hash_symbolic_raw(keys, sent=sent, table_size=table_size,
+                                   interpret=interpret)

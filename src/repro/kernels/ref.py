@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Tests sweep shapes/dtypes and assert_allclose the kernels (interpret mode)
+against these references.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spa_accumulate_ref(keys: jax.Array, vals: jax.Array, *, m: int, n: int) -> jax.Array:
+    """Dense scatter-add oracle: keys are CSC-linearized, >= m*n means padding."""
+    valid = keys < m * n
+    k = jnp.where(valid, keys, 0)
+    v = jnp.where(valid, vals, 0.0).astype(jnp.float32)
+    flat = jnp.zeros((m * n,), jnp.float32).at[k].add(v)
+    return flat.reshape(n, m).T
+
+
+def hash_accumulate_ref(keys: jax.Array, vals: jax.Array, *, sent: int):
+    """Key-grouped sums, returned sorted by key: (sorted unique keys padded
+    with ``sent``, their summed values, distinct count)."""
+    cap = keys.shape[0]
+    order = jnp.argsort(keys)
+    k_s = keys[order]
+    v_s = jnp.where(k_s != sent, vals[order], 0.0).astype(jnp.float32)
+    valid = k_s != sent
+    first = jnp.concatenate([jnp.ones((1,), bool), k_s[1:] != k_s[:-1]])
+    is_new = first & valid
+    gid = jnp.clip(jnp.cumsum(is_new) - 1, 0, cap - 1)
+    out_vals = jax.ops.segment_sum(v_s, gid, num_segments=cap)
+    out_keys = jnp.full((cap,), sent, jnp.int32).at[
+        jnp.where(is_new, gid, cap)].set(k_s, mode="drop")
+    nnz = is_new.sum().astype(jnp.int32)
+    out_vals = jnp.where(jnp.arange(cap) < nnz, out_vals, 0.0)
+    return out_keys, out_vals, nnz
+
+
+def hash_symbolic_ref(keys: jax.Array, *, sent: int) -> jax.Array:
+    """Distinct-valid-key count."""
+    k_s = jnp.sort(keys)
+    valid = k_s != sent
+    first = jnp.concatenate([jnp.ones((1,), bool), k_s[1:] != k_s[:-1]])
+    return (first & valid).sum().astype(jnp.int32)
+
+
+def topk_block_ref(x: jax.Array, k: int, block: int):
+    """Per-block top-k by |value| over a flat array reshaped to (-1, block).
+    Returns (indices into flat x, values), both (num_blocks*k,)."""
+    nb = x.shape[0] // block
+    xb = x[: nb * block].reshape(nb, block)
+    absv = jnp.abs(xb)
+    _, idx = jax.lax.top_k(absv, k)
+    base = (jnp.arange(nb) * block)[:, None]
+    flat_idx = (base + idx).reshape(-1)
+    return flat_idx, x[flat_idx]

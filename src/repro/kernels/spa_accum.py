@@ -1,0 +1,93 @@
+"""Sliding blocked-SPA accumulation kernel — TPU adaptation of sliding hash.
+
+Paper (Alg. 7/8): when the accumulator exceeds the last-level cache M, split
+the row space into ``parts = ceil(bytes/M)`` and slide the table. Here the
+fast memory is VMEM: the grid's first dimension slides a dense
+``(block_rows, n)`` f32 accumulator tile down the row space, and the second
+dimension streams chunks of the concatenated (key, val) input through VMEM.
+The output tile stays VMEM-resident across the whole chunk sweep (the output
+index map is constant in the chunk dimension — the standard Pallas
+accumulation pattern), so every random accumulator access is a VMEM hit:
+exactly the paper's cache discipline with M := VMEM.
+
+Keys are CSC-linearized (``key = col*m + row``); the sentinel ``m*n`` (or
+anything >= m*n) marks padding and is dropped in-kernel.
+
+The in-tile scatter is a ``fori_loop`` of dynamic stores. On real TPU this
+serializes through the store unit; the production note in DESIGN.md explains
+why this is still the right structure (the alternative — one-hot matmul — is
+MXU-friendly but needs O(chunk·block·n) FLOPs). Interpret mode validates the
+semantics bit-exactly against kernels/ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_CHUNK = 1024
+
+
+def _spa_kernel(keys_ref, vals_ref, out_ref, *, m: int, n: int,
+                block_rows: int, chunk: int):
+    """``m`` is the TRUE row count (keys are col*m+row); the grid may cover a
+    padded row space (parts*block_rows >= m) — trailing rows just stay 0."""
+    part = pl.program_id(0)
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    row_lo = part * block_rows
+    keys = keys_ref[...]
+    vals = vals_ref[...]
+    rows = keys % m
+    cols = keys // m
+    valid = (keys < m * n) & (rows >= row_lo) & (rows < row_lo + block_rows)
+    rows_local = jnp.where(valid, rows - row_lo, 0)
+    cols_local = jnp.where(valid, cols, 0)
+    vals_masked = jnp.where(valid, vals, 0.0)
+
+    def body(e, _):
+        r = rows_local[e]
+        cc = cols_local[e]
+        cur = pl.load(out_ref, (r, cc))
+        pl.store(out_ref, (r, cc), cur + vals_masked[e])
+        return 0
+
+    jax.lax.fori_loop(0, chunk, body, 0)
+
+
+def spa_accumulate_raw(keys: jax.Array, vals: jax.Array, *, m: int, n: int,
+                       block_rows: int, chunk: int = DEFAULT_CHUNK,
+                       interpret: bool = True) -> jax.Array:
+    """Scatter-accumulate (key, val) streams into a dense (m, n) f32 array.
+
+    ``keys``/``vals`` must already be padded to a multiple of ``chunk`` with
+    sentinel keys (>= m*n) and zero values. ``m`` must be a multiple of
+    ``block_rows`` (pad rows upstream).
+    """
+    assert keys.shape == vals.shape and keys.ndim == 1
+    assert keys.shape[0] % chunk == 0, "pad inputs to a chunk multiple"
+    parts = (m + block_rows - 1) // block_rows
+    m_pad = parts * block_rows
+    num_chunks = keys.shape[0] // chunk
+
+    kernel = functools.partial(_spa_kernel, m=m, n=n, block_rows=block_rows,
+                               chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(parts, num_chunks),
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda i, c: (c,)),
+            pl.BlockSpec((chunk,), lambda i, c: (c,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, n), lambda i, c: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), jnp.float32),
+        interpret=interpret,
+    )(keys, vals)
+    return out[:m]

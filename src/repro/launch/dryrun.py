@@ -1,0 +1,216 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay the first statements — jax locks the device
+count at first backend init, and the production meshes need 512 placeholder
+devices. Smoke tests / benches import other modules and see 1 device.
+
+For each cell:
+  jit(step, in_shardings, out_shardings).lower(ShapeDtypeStructs).compile()
+then record memory_analysis (proves fit), cost_analysis (FLOPs/bytes for
+§Roofline) and the parsed collective bytes. Results append to a JSON that
+EXPERIMENTS.md §Dry-run/§Roofline are generated from.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_config, supports_shape
+from repro.data.synthetic import input_specs, decode_inputs
+from repro.launch.hlo_analysis import analyze_compiled, PEAK_FLOPS, HBM_BW, ICI_BW
+from repro.launch.mesh import make_production_mesh, chips
+from repro.models import build_model
+from repro.models.common import SHAPES
+from repro.optim import adamw_init
+from repro.sharding import mesh_context
+from repro.sharding.params import (batch_shardings, cache_shardings,
+                                   params_shardings)
+from repro.train import (TrainHParams, make_decode_step, make_prefill_step,
+                         make_train_step)
+
+
+def serve_param_sds(params_sds):
+    """Serving stores params in bf16 (inference convention)."""
+    import jax.numpy as jnp
+
+    def cast(l):
+        if jnp.issubdtype(l.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(l.shape, jnp.bfloat16)
+        return l
+
+    return jax.tree.map(cast, params_sds)
+
+
+def serve_shardings(params_sds, mesh):
+    """TP-only (no FSDP gather per token)."""
+    from repro.sharding.params import param_spec, _validated
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def spec(path, leaf):
+        p = param_spec(path, leaf, mesh)
+        dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+        cleaned = tuple(None if ax == dp or ax == "data" or
+                        (isinstance(ax, tuple) and "data" in ax) else ax
+                        for ax in (tuple(p) + (None,) * (leaf.ndim - len(p))))
+        return NamedSharding(mesh, _validated(cleaned, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec, params_sds)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               hp: TrainHParams | None = None, attn_chunk_decode: int = 4096,
+               use_sp: bool = False):
+    import dataclasses
+    cfg = get_config(arch)
+    if use_sp:
+        cfg = dataclasses.replace(cfg, use_sp=True)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    hp = hp or TrainHParams()
+
+    with mesh_context(mesh):
+        params_sds = jax.eval_shape(
+            lambda: model.init(jax.random.PRNGKey(0)))
+        if shape.kind == "train":
+            p_sh = params_shardings(params_sds, mesh)
+            opt_sds = jax.eval_shape(adamw_init, params_sds)
+            o_sh = params_shardings(opt_sds, mesh)
+            batch_sds = input_specs(cfg, shape)
+            b_sh = batch_shardings(batch_sds, mesh)
+            step = make_train_step(model, hp)
+            jf = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         donate_argnums=(0, 1))
+            lowered = jf.lower(params_sds, opt_sds, batch_sds)
+        elif shape.kind == "prefill":
+            sp_sds = serve_param_sds(params_sds)
+            p_sh = serve_shardings(sp_sds, mesh)
+            batch_sds = input_specs(cfg, shape)
+            b_sh = batch_shardings(batch_sds, mesh)
+            step = make_prefill_step(model, attn_chunk=hp.attn_chunk)
+            jf = jax.jit(step, in_shardings=(p_sh, b_sh))
+            lowered = jf.lower(sp_sds, batch_sds)
+        else:  # decode
+            sp_sds = serve_param_sds(params_sds)
+            p_sh = serve_shardings(sp_sds, mesh)
+            cache_sds, tok_sds = decode_inputs(cfg, shape, model)
+            c_sh = cache_shardings(cache_sds, cfg, mesh, shape.global_batch)
+            step = make_decode_step(model, attn_chunk=attn_chunk_decode)
+            jf = jax.jit(step, in_shardings=(p_sh, c_sh, None),
+                         donate_argnums=(1,))
+            lowered = jf.lower(sp_sds, cache_sds, tok_sds)
+    return lowered, cfg, shape, mesh
+
+
+def model_flops(cfg, shape, n_chips: int) -> float:
+    """Analytic useful FLOPs per device per step (6ND / 2ND convention,
+    embedding-lookup params excluded, active params for MoE)."""
+    n = cfg.active_param_count() - cfg.vocab * cfg.d_model
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n * tokens / n_chips
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             hp: TrainHParams | None = None, use_sp: bool = False) -> dict:
+    t0 = time.time()
+    lowered, cfg, shape, mesh = lower_cell(arch, shape_name, multi_pod, hp,
+                                           use_sp=use_sp)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    roof = analyze_compiled(compiled)
+    n_chips = chips(mesh)
+    mf = model_flops(cfg, shape, n_chips)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "model_flops_per_chip": mf,
+        "useful_flops_ratio": mf / roof.flops if roof.flops else None,
+        **roof.to_dict(),
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSON records here")
+    ap.add_argument("--attn-chunk", type=int, default=1024)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--accum-dtype", default="float32")
+    ap.add_argument("--sp", action="store_true",
+                    help="sequence-shard the residual stream (SP)")
+    ap.add_argument("--ce-chunk", type=int, default=512)
+    ap.add_argument("--print-hlo-collectives", action="store_true")
+    args = ap.parse_args()
+
+    hp = TrainHParams(attn_chunk=args.attn_chunk, ce_chunk=args.ce_chunk,
+                      grad_accum=args.grad_accum,
+                      accum_dtype=args.accum_dtype)
+
+    cells = []
+    archs = [args.arch] if args.arch else ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            if not supports_shape(a, s):
+                print(f"SKIP {a} × {s} (documented in DESIGN.md §6)")
+                continue
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    records = []
+    for a, s, mp in cells:
+        label = f"{a} × {s} × {'2x16x16' if mp else '16x16'}"
+        try:
+            rec = run_cell(a, s, mp, hp, use_sp=args.sp)
+            peak = (rec["arg_bytes"] + rec["out_bytes"] + rec["temp_bytes"])
+            print(f"OK   {label}: flops/chip={rec['flops']:.3e} "
+                  f"hbm={rec['hbm_bytes']:.3e} coll={rec['coll_bytes']:.3e} "
+                  f"bottleneck={rec['bottleneck']} "
+                  f"mem={peak/2**30:.2f}GiB "
+                  f"(compile {rec['compile_s']}s)", flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            rec = {"arch": a, "shape": s,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "status": f"FAIL: {type(e).__name__}: {e}"}
+            print(f"FAIL {label}: {e}")
+        records.append(rec)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+        # replace same-key records
+        keys = {(r["arch"], r["shape"], r["mesh"]) for r in records}
+        existing = [r for r in existing
+                    if (r["arch"], r["shape"], r["mesh"]) not in keys]
+        with open(args.out, "w") as f:
+            json.dump(existing + records, f, indent=1)
+        print(f"wrote {len(records)} records to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

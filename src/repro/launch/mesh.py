@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — jax locks the device count at first backend init, and smoke tests
+must see 1 CPU device while the dry-run sees 512 placeholders.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips/pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dp_mesh(n: int | None = None):
+    """Pure data-parallel mesh (the sparse-allreduce setting)."""
+    n = n or len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+def chips(mesh) -> int:
+    import numpy as np
+    return int(np.prod(list(mesh.shape.values())))

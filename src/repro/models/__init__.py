@@ -1,0 +1,21 @@
+"""Model zoo registry: config -> model instance."""
+from repro.models.common import ModelConfig, ShapeConfig, SHAPES
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models.transformer import TransformerLM
+        return TransformerLM(cfg)
+    if cfg.family == "ssm":
+        from repro.models.ssm import MambaLM
+        return MambaLM(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import HybridLM
+        return HybridLM(cfg)
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecLM
+        return EncDecLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "build_model"]

@@ -1,0 +1,208 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block.
+
+54 mamba2 layers in 9 groups of 6; after every group the *shared* transformer
+block (single parameter set, 9 invocation sites) runs. Parameter reuse means
+its gradient is the SUM of 9 per-site gradients — itself an SpKAdd when those
+site-gradients are sparsified (DESIGN.md §6).
+
+Decode keeps one MambaCache per mamba layer plus one KVCache per shared-block
+invocation site (9 caches, same params).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.common import ModelConfig, dense_init, stacked
+from repro.models.ssm import (MambaCache, init_mamba_params, mamba_block_full,
+                              mamba_block_decode, _conv_dim)
+from repro.models.transformer import chunked_ce
+from repro.sharding import shard
+
+
+class HybridCaches(NamedTuple):
+    mamba: MambaCache       # stacked (n_groups, group_size, ...)
+    attn: L.KVCache         # stacked (n_sites, ...)
+    length: jax.Array
+
+
+jax.tree_util.register_pytree_node(
+    HybridCaches,
+    lambda c: ((c.mamba, c.attn, c.length), None),
+    lambda _, l: HybridCaches(*l))
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.attn_every > 0
+        self.cfg = cfg
+        assert cfg.n_layers % cfg.attn_every == 0, \
+            "hybrid n_layers must be a multiple of attn_every"
+        self.n_groups = cfg.n_layers // cfg.attn_every
+
+    # ------------------------------------------------------------------
+    def _init_shared(self, key):
+        cfg = self.cfg
+        d = cfg.d_model
+        ks = jax.random.split(key, 8)
+        return {
+            "ln1": jnp.zeros((d,), cfg.pdtype),
+            "wq": dense_init(ks[0], (d, cfg.q_dim), cfg.pdtype),
+            "wk": dense_init(ks[1], (d, cfg.kv_dim), cfg.pdtype),
+            "wv": dense_init(ks[2], (d, cfg.kv_dim), cfg.pdtype),
+            "wo": dense_init(ks[3], (cfg.q_dim, d), cfg.pdtype),
+            "ln2": jnp.zeros((d,), cfg.pdtype),
+            "w1": dense_init(ks[4], (d, cfg.d_ff), cfg.pdtype),
+            "w3": dense_init(ks[5], (d, cfg.d_ff), cfg.pdtype),
+            "w2": dense_init(ks[6], (cfg.d_ff, d), cfg.pdtype),
+        }
+
+    def init(self, key):
+        cfg = self.cfg
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "embed": dense_init(k1, (cfg.vocab, cfg.d_model), cfg.pdtype,
+                                fan_in=cfg.d_model),
+            "head": dense_init(k2, (cfg.d_model, cfg.vocab), cfg.pdtype),
+            "final_ln": jnp.zeros((cfg.d_model,), cfg.pdtype),
+            "mamba_layers": jax.tree.map(
+                lambda x: x.reshape(self.n_groups, cfg.attn_every, *x.shape[1:]),
+                stacked(lambda k: init_mamba_params(k, cfg), k3, cfg.n_layers)),
+            "shared": self._init_shared(k4),
+        }
+
+    # ------------------------------------------------------------------
+    def _shared_full(self, p, x, positions, chunk):
+        h = L.rms_norm(x, p["ln1"])
+        cfg = self.cfg
+        B, S, _ = h.shape
+        q = (h @ p["wq"].astype(h.dtype)).reshape(B, S, cfg.n_heads, cfg.head_dim)
+        k = (h @ p["wk"].astype(h.dtype)).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ p["wv"].astype(h.dtype)).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        q = shard(q, "batch", None, "heads", None)
+        o = L.blockwise_attention(q, k, v, causal=True, chunk=chunk)
+        x = x + o.reshape(B, S, -1) @ p["wo"].astype(x.dtype)
+        h2 = L.rms_norm(x, p["ln2"])
+        y = L.swiglu(h2, p["w1"].astype(x.dtype), p["w3"].astype(x.dtype),
+                     p["w2"].astype(x.dtype))
+        return x + shard(y, "batch", None, None), (k, v)
+
+    def _shared_decode(self, p, x, cache, length, chunk):
+        cfg = self.cfg
+        B = x.shape[0]
+        pos = jnp.broadcast_to(length, (B, 1)).astype(jnp.int32)
+        h = L.rms_norm(x, p["ln1"])
+        q = (h @ p["wq"].astype(h.dtype)).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        k = (h @ p["wk"].astype(h.dtype)).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ p["wv"].astype(h.dtype)).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k = L.apply_rope(k, pos, cfg.rope_theta)
+        new_cache = L.cache_update_decode(cache._replace(length=length), k, v)
+        kv_len = jnp.minimum(length + 1, cache.k.shape[1])
+        o = L.blockwise_attention(q, new_cache.k, new_cache.v, causal=False,
+                                  kv_len=kv_len, chunk=chunk)
+        x = x + o.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)
+        h2 = L.rms_norm(x, p["ln2"])
+        y = L.swiglu(h2, p["w1"].astype(x.dtype), p["w3"].astype(x.dtype),
+                     p["w2"].astype(x.dtype))
+        return x + y, new_cache
+
+    # ------------------------------------------------------------------
+    def backbone(self, params, x, positions, *, remat=False,
+                 collect_cache=False, chunk=1024):
+        cfg = self.cfg
+        shared_p = params["shared"]
+
+        def group_body(xc, g_params):
+            def mamba_body(xm, p_l):
+                xn, cache = mamba_block_full(p_l, xm, cfg)
+                return xn, (cache if collect_cache else None)
+
+            f = jax.checkpoint(mamba_body) if remat else mamba_body
+            xc, mcaches = jax.lax.scan(f, xc, g_params)
+            fs = (jax.checkpoint(self._shared_full, static_argnums=(3,))
+                  if remat else self._shared_full)
+            xc, kv = fs(shared_p, xc, positions, chunk)
+            return xc, (mcaches, kv if collect_cache else None)
+
+        x, (mcaches, kvs) = jax.lax.scan(group_body, x, params["mamba_layers"])
+        return x, (mcaches, kvs)
+
+    def loss(self, params, batch, *, remat=True, ce_chunk=512, attn_chunk=1024, **_):
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = labels.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = params["embed"].astype(cfg.cdtype)[tokens]
+        x = shard(x, "batch", None, None)
+        x, _ = self.backbone(params, x, positions, remat=remat, chunk=attn_chunk)
+        x = L.rms_norm(x, params["final_ln"])
+        return chunked_ce(x, params["head"], labels, chunk=ce_chunk)
+
+    # ------------------------------------------------------------------
+    def prefill(self, params, tokens=None, max_len=None, attn_chunk=1024, **_):
+        cfg = self.cfg
+        B, S = tokens.shape
+        max_len = max_len or S
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = params["embed"].astype(cfg.cdtype)[tokens]
+        x, (mcaches, kvs) = self.backbone(params, x, positions,
+                                          collect_cache=True, chunk=attn_chunk)
+        k, v = kvs  # (n_groups, B, S, kv, hd)
+        pad = max_len - S
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        attn_cache = L.KVCache(kp, vp, jnp.full((self.n_groups,), S, jnp.int32))
+        caches = HybridCaches(mamba=mcaches, attn=attn_cache,
+                              length=jnp.asarray(S, jnp.int32))
+        x = L.rms_norm(x[:, -1:], params["final_ln"])
+        logits = (x @ params["head"].astype(x.dtype)).astype(jnp.float32)[:, 0]
+        return logits, caches
+
+    def init_cache(self, B, max_len):
+        cfg = self.cfg
+        one_m = MambaCache(
+            conv=jnp.zeros((B, cfg.conv_width - 1, _conv_dim(cfg)), cfg.cdtype),
+            ssm=jnp.zeros((B, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                          jnp.float32))
+        mcaches = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x, (self.n_groups, cfg.attn_every) + x.shape).copy(), one_m)
+        kv = L.KVCache(
+            jnp.zeros((self.n_groups, B, max_len, cfg.n_kv_heads, cfg.head_dim),
+                      cfg.cdtype),
+            jnp.zeros((self.n_groups, B, max_len, cfg.n_kv_heads, cfg.head_dim),
+                      cfg.cdtype),
+            jnp.zeros((self.n_groups,), jnp.int32))
+        return HybridCaches(mamba=mcaches, attn=kv,
+                            length=jnp.zeros((), jnp.int32))
+
+    def decode_step(self, params, caches: HybridCaches, tokens, *,
+                    attn_chunk=4096, **_):
+        cfg = self.cfg
+        length = caches.length
+        x = params["embed"].astype(cfg.cdtype)[tokens[:, None]]
+        shared_p = params["shared"]
+
+        def group_body(xc, inp):
+            g_params, m_c, a_c = inp
+
+            def mamba_body(xm, inp2):
+                p_l, c_l = inp2
+                xn, c_new = mamba_block_decode(p_l, xm, c_l, cfg)
+                return xn, c_new
+
+            xc, new_m = jax.lax.scan(mamba_body, xc, (g_params, m_c))
+            xc, new_a = self._shared_decode(shared_p, xc, a_c, length, attn_chunk)
+            return xc, (new_m, new_a)
+
+        x, (new_m, new_a) = jax.lax.scan(
+            group_body, x, (params["mamba_layers"], caches.mamba, caches.attn))
+        x = L.rms_norm(x, params["final_ln"])
+        logits = (x @ params["head"].astype(x.dtype)).astype(jnp.float32)[:, 0]
+        return logits, HybridCaches(mamba=new_m, attn=new_a, length=length + 1)

@@ -1,0 +1,263 @@
+"""Shared neural layers: RMSNorm, RoPE (+M-RoPE), GQA attention, MLPs.
+
+Attention is blockwise (flash-style online softmax via ``lax.scan`` over KV
+chunks) so 32k-prefill and 500k-decode lower with bounded live memory — this
+is the pure-XLA path; cost_analysis sees every FLOP (a Pallas attention kernel
+would hide them behind a custom call, see DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, sections, theta: float) -> jax.Array:
+    """Qwen2-VL multimodal RoPE. positions: (3, B, S) for (t, h, w) streams;
+    ``sections`` = per-stream frequency counts summing to D/2. Frequencies are
+    interleaved by stream exactly as in the reference implementation: channel
+    i of the D/2 frequency bins takes its position from the stream that owns
+    bin i."""
+    d = x.shape[-1]
+    half = d // 2
+    t_n, h_n, w_n = sections
+    assert t_n + h_n + w_n == half, "mrope sections must sum to head_dim/2"
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    owner = jnp.concatenate([
+        jnp.zeros((t_n,), jnp.int32),
+        jnp.ones((h_n,), jnp.int32),
+        jnp.full((w_n,), 2, jnp.int32),
+    ])                                                  # (D/2,)
+    # (3, B, S, D/2) -> each frequency bin reads the stream that owns it
+    ang_all = positions[..., None].astype(jnp.float32) * freqs  # (3, B, S, D/2)
+    ang = (jax.nn.one_hot(owner, 3, dtype=jnp.float32)          # (D/2, 3)
+           * jnp.moveaxis(ang_all, 0, -1)).sum(-1)              # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise attention (flash-style online softmax over KV chunks)
+# ---------------------------------------------------------------------------
+
+def _chunk_scores_mask(q_pos, k_pos, kv_len, causal: bool, window: int):
+    """(Sq, Ck) boolean mask of admissible attention pairs."""
+    ok = (k_pos[None, :] < kv_len)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return ok
+
+
+def local_window_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           window: int) -> jax.Array:
+    """Sliding-window causal attention in O(S·2w) instead of O(S²).
+
+    Tiles the sequence into blocks of w = window; each query block attends
+    only (its own block, previous block) — exactly the support of a causal
+    w-window. This is the TPU-natural banded form of gemma3's local layers:
+    the full blockwise scan would stream S/chunk KV blocks per query and
+    mask all but two of them.
+    """
+    B, S, Hq, D = q.shape
+    _, _, Hkv, _ = k.shape
+    G = Hq // Hkv
+    w = window
+    nb = (S + w - 1) // w
+    pad = nb * w - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qb = q.reshape(B, nb, w, Hkv, G, D).astype(jnp.float32) * (D ** -0.5)
+    kb = k.reshape(B, nb, w, Hkv, D).astype(jnp.float32)
+    vb = v.reshape(B, nb, w, Hkv, D).astype(jnp.float32)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kb], axis=2)      # (B, nb, 2w, Hkv, D)
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+    s = jnp.einsum("bnqhgd,bnchd->bnhgqc", qb, k2)  # (B, nb, Hkv, G, w, 2w)
+    qpos = jnp.arange(w)[:, None] + w               # within the 2w axis
+    kpos = jnp.arange(2 * w)[None, :]
+    ok = (kpos <= qpos) & (kpos > qpos - w)
+    first_block_ok = kpos >= w                      # block 0 has no predecessor
+    blk = jnp.arange(nb)
+    valid_q = (blk[:, None] * w + jnp.arange(w)[None, :]) < S  # padding rows
+    mask = jnp.where(blk[:, None, None] == 0, ok[None] & first_block_ok[None],
+                     ok[None])                       # (nb, w, 2w)
+    s = jnp.where(mask[None, :, None, None, :, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bnhgqc,bnchd->bnqhgd", p, v2)
+    o = o.reshape(B, nb * w, Hq, D)[:, :S]
+    del valid_q
+    return o.astype(q.dtype)
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        q_offset=0, kv_len=None,
+                        chunk: int = 1024) -> jax.Array:
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D).
+
+    GQA-aware (Hq = G·Hkv groups share a KV head without materializing the
+    repeat), fp32 online-softmax accumulators, optional sliding window and a
+    dynamic valid-KV length (padded caches). ``q_offset`` is the absolute
+    position of q[0] (decode: the current cache length).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = D ** -0.5
+    if kv_len is None:
+        kv_len = Skv
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    q_pos = jnp.asarray(q_offset, jnp.int32) + jnp.arange(Sq, dtype=jnp.int32)
+
+    qg = q.reshape(B, Sq, Hkv, G, D) * scale
+    n_chunks = max(1, (Skv + chunk - 1) // chunk)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, Hkv, D)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, D)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        c_idx, k_blk, v_blk = inputs
+        k_pos = c_idx * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        # scores: (B, Sq, Hkv, G, Ck)
+        s = jnp.einsum("bshgd,bchd->bshgc", qg.astype(jnp.float32),
+                       k_blk.astype(jnp.float32))
+        mask = _chunk_scores_mask(q_pos, k_pos, kv_len, causal, window)
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard -inf rows (no valid keys yet) against NaN in exp
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + p.sum(axis=-1)
+        # p in the model's compute dtype for the PV matmul: for bf16 models
+        # this halves the dominant HBM term; fp32 models stay exact. The
+        # l/acc accumulators are always fp32 so normalization is exact.
+        pv_dt = jnp.bfloat16 if q.dtype == jnp.bfloat16 else jnp.float32
+        pv = jnp.einsum("bshgc,bchd->bshgd", p.astype(pv_dt),
+                        v_blk.astype(pv_dt),
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
+    if n_chunks == 1:
+        (m, l, acc), _ = step((m0, l0, acc0),
+                              (jnp.asarray(0, jnp.int32), kc[:, 0], vc[:, 0]))
+    else:
+        xs = (jnp.arange(n_chunks, dtype=jnp.int32),
+              jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0))
+        # checkpoint the chunk body: backward recomputes the (Sq, Ck) score
+        # block instead of saving one per chunk (flash-attention-style remat)
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, acc0), xs)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, q_offset=0, kv_len=None):
+    """Quadratic reference for tests."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    if kv_len is None:
+        kv_len = Skv
+    q_pos = jnp.asarray(q_offset, jnp.int32) + jnp.arange(Sq, dtype=jnp.int32)
+    k_pos = jnp.arange(Skv, dtype=jnp.int32)
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32) * (D ** -0.5)
+    s = jnp.einsum("bshgd,bchd->bshgc", qg, k.astype(jnp.float32))
+    mask = _chunk_scores_mask(q_pos, k_pos, jnp.asarray(kv_len, jnp.int32),
+                              causal, window)
+    s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("bshgc,bchd->bshgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array       # (B, S_max, Hkv, D)
+    v: jax.Array
+    length: jax.Array  # int32 scalar: valid prefix
+
+
+jax.tree_util.register_pytree_node(
+    KVCache,
+    lambda c: ((c.k, c.v, c.length), None),
+    lambda _, l: KVCache(*l),
+)
+
+
+def cache_update_decode(cache: KVCache, k_new: jax.Array, v_new: jax.Array) -> KVCache:
+    """Append one step (Sq=1). For sliding-window caches the write wraps
+    (ring buffer) — positions are tracked by ``length`` monotonically."""
+    S_max = cache.k.shape[1]
+    pos = cache.length % S_max
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                     (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                     (0, pos, 0, 0))
+    return KVCache(k, v, cache.length + 1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(x, w1, w3, w2):
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def gelu_mlp(x, w1, w2):
+    return jax.nn.gelu(x @ w1) @ w2

@@ -1,0 +1,103 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (EP-shardable).
+
+Dispatch: tokens' (token, expert) assignments are sorted by expert id; each
+expert takes its first ``capacity`` assignments (the rest drop — standard
+fixed-capacity MoE). The dispatch buffer (E, C, d) is sharded experts->model,
+capacity->data, so under pjit the redistribution lowers to all_to_all — the
+production EP pattern.
+
+The **combine step is an SpKAdd**: top-k expert outputs are k sparse
+token-update matrices summed into the dense activation — the same
+scatter-accumulate the paper's SPA performs (DESIGN.md §3.3). We implement it
+with the same ``.at[].add`` primitive the core library uses.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init
+from repro.sharding import shard
+
+
+def init_moe_params(key, cfg: ModelConfig):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), cfg.pdtype),
+        "we1": dense_init(ks[1], (e, d, ff), cfg.pdtype, fan_in=d),
+        "we3": dense_init(ks[2], (e, d, ff), cfg.pdtype, fan_in=d),
+        "we2": dense_init(ks[3], (e, ff, d), cfg.pdtype, fan_in=ff),
+    }
+
+
+def capacity_for(tokens: int, cfg: ModelConfig) -> int:
+    c = math.ceil(tokens * cfg.moe_topk / cfg.n_experts * cfg.capacity_factor)
+    return max(8, ((c + 7) // 8) * 8)  # sublane-align
+
+
+def moe_ffn(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux load-balance loss scalar)."""
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.moe_topk
+    C = capacity_for(T, cfg)
+
+    xf = shard(x.reshape(T, d), "batch", None)
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = shard(jax.nn.softmax(logits, axis=-1), "batch", None)  # (T, E)
+    gate, expert = jax.lax.top_k(probs, K)                     # (T, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    gate = shard(gate, "batch", None)
+    expert = shard(expert, "batch", None)
+
+    # aux loss (Switch-style): E * sum_e f_e * P_e
+    f = jnp.zeros((E,), jnp.float32).at[expert.reshape(-1)].add(1.0) / (T * K)
+    pbar = probs.mean(0)
+    aux = E * jnp.sum(f * pbar)
+
+    # ---- sort-based dispatch -------------------------------------------
+    # every (T*K,)-sized tensor is kept batch-sharded; the one unavoidable
+    # redistribution (tokens -> expert-sorted order) then lowers to an
+    # all-to-all of the bf16 activations instead of fp32 all-reduces of
+    # replicated buffers.
+    flat_e = shard(expert.reshape(T * K).astype(jnp.int32), "batch")
+    order = shard(jnp.argsort(flat_e, stable=True), "batch")    # (T*K,)
+    sorted_e = shard(flat_e[order], "batch")
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=jnp.int32))
+    pos = shard(jnp.arange(T * K, dtype=jnp.int32) - starts[sorted_e], "batch")
+    keep = pos < C
+    slot = sorted_e * C + pos                                   # unique where keep
+    tok = (order // K).astype(jnp.int32)
+
+    # inverse permutation: slot -> assignment index. Only int32 is scattered
+    # (31 MB replicated is nothing); the big (E*C, d) buffer is then built by
+    # a GATHER, which the SPMD partitioner shards by output rows — no
+    # replicated activation-sized scatter, no fp32 all-reduce of partials.
+    inv = jnp.full((E * C,), T * K, jnp.int32)
+    inv = inv.at[jnp.where(keep, slot, E * C)].set(
+        jnp.arange(T * K, dtype=jnp.int32), mode="drop")
+    slot_valid = inv < T * K
+    src_tok = jnp.where(slot_valid, tok[jnp.clip(inv, 0, T * K - 1)], 0)
+    buf = xf[src_tok] * slot_valid[:, None].astype(x.dtype)
+    buf = shard(buf.reshape(E, C, d), "experts", "capacity", None)
+
+    # ---- expert FFN (SwiGLU), experts on 'model', capacity on 'data' ----
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["we1"].astype(x.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["we3"].astype(x.dtype))
+    h = shard(h, "experts", "capacity", None)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["we2"].astype(x.dtype))
+    out_buf = shard(out_buf, "experts", "capacity", None)
+
+    # ---- combine: SpKAdd of K sparse token-update matrices --------------
+    yflat = out_buf.reshape(E * C, d)
+    sorted_gate = gate.reshape(T * K)[order].astype(x.dtype)
+    contrib = shard(yflat[jnp.clip(slot, 0, E * C - 1)], "batch", None)
+    contrib = contrib * sorted_gate[:, None]
+    y = jnp.zeros((T, d), x.dtype)
+    y = y.at[jnp.where(keep, tok, T)].add(contrib, mode="drop")
+    y = shard(y, "batch", None)
+    return y.reshape(B, S, d), aux

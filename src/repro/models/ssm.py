@@ -1,0 +1,265 @@
+"""Mamba2 (SSD — state-space duality) blocks and LM.
+
+Training/prefill uses the chunked SSD algorithm: the sequence is split into
+chunks of L tokens; each chunk computes its quadratic intra-chunk term (the
+"attention-like" dual form) and passes a (H, headdim, N) state across chunks
+through a ``lax.scan``. We scan chunks *sequentially* instead of materializing
+all (L, L) kernels at once — on a 4k×256-token training step the batched
+(B, nc, L, L, H) tensor would be TBs; the scan keeps live memory at one
+chunk's worth and the recurrence is inherently sequential anyway. All decay
+exponents are ≤ 0 (A < 0, dt > 0) so every exp() is ≤ 1: fp32-stable without
+rescaling tricks.
+
+Decode is the O(1) recurrent form: state ← dA·state + dt·B⊗x, y = C·state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.common import ModelConfig, dense_init, stacked
+from repro.models.transformer import chunked_ce
+from repro.sharding import shard
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # (B, W-1, conv_dim) most-recent inputs, oldest first
+    ssm: jax.Array    # (B, H, headdim, N) running state
+
+
+jax.tree_util.register_pytree_node(
+    MambaCache, lambda c: ((c.conv, c.ssm), None), lambda _, l: MambaCache(*l))
+
+
+def _conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state  # x + B + C (G=1 group)
+
+
+def init_mamba_params(key, cfg: ModelConfig):
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    cdim = _conv_dim(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": jnp.zeros((d,), cfg.pdtype),
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * N + H), cfg.pdtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_width, cdim), cfg.pdtype,
+                             fan_in=cfg.conv_width),
+        "conv_b": jnp.zeros((cdim,), cfg.pdtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(cfg.pdtype),
+        "D": jnp.ones((H,), cfg.pdtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))
+        ).astype(cfg.pdtype),
+        "gn": jnp.zeros((di,), cfg.pdtype),
+        "out_proj": dense_init(ks[3], (di, d), cfg.pdtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + _conv_dim(cfg)]
+    dt = zxbcdt[..., di + _conv_dim(cfg):]
+    assert dt.shape[-1] == H
+    return z, xBC, dt
+
+
+def _causal_conv_full(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C) with kernel (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC)
+    for i in range(W):  # W is 4: unrolled taps beat conv_general on TPU here
+        out = out + pad[:, i:i + xBC.shape[1], :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunk_scan(x, dt, Bm, Cm, A, chunk: int, state0=None):
+    """Chunked SSD. x: (B,S,H,P); dt: (B,S,H); Bm/Cm: (B,S,N); A: (H,)<0.
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    # pad S to a chunk multiple: dt=0 padding is exact (dA=0 -> decay 1,
+    # contribution dt·B·x = 0), so state and outputs are untouched.
+    S_pad = ((S + chunk - 1) // chunk) * chunk if S > chunk else chunk
+    if S_pad != S:
+        pad = S_pad - S
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    S_eff = x.shape[1]
+    nc = S_eff // chunk
+    Lc = chunk
+
+    xr = x.reshape(Bsz, nc, Lc, H, P).swapaxes(0, 1)
+    dtr = dt.reshape(Bsz, nc, Lc, H).swapaxes(0, 1)
+    Br = Bm.reshape(Bsz, nc, Lc, N).swapaxes(0, 1)
+    Cr = Cm.reshape(Bsz, nc, Lc, N).swapaxes(0, 1)
+
+    tril = jnp.tril(jnp.ones((Lc, Lc), jnp.float32))
+
+    def chunk_step(state, inp):
+        xc, dtc, Bc, Cc = inp                     # (B,L,H,P), (B,L,H), (B,L,N)
+        dA = dtc * A                              # (B,L,H) ≤ 0
+        cum = jnp.cumsum(dA, axis=1)              # (B,L,H)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]      # (B,L,L,H), i≥j ≤ 0
+        decay = jnp.exp(jnp.where(tril[None, :, :, None] > 0, seg, -jnp.inf))
+        CB = jnp.einsum("bln,bmn->blm", Cc, Bc)            # (B,L,L)
+        att = CB[..., None] * decay                         # (B,L,L,H)
+        xdt = xc * dtc[..., None]                           # (B,L,H,P)
+        y_intra = jnp.einsum("blmh,bmhp->blhp", att, xdt)
+        y_inter = jnp.einsum("bln,bhpn,blh->blhp", Cc, state, jnp.exp(cum))
+        dec_end = jnp.exp(cum[:, -1:, :] - cum)             # (B,L,H)
+        s_new = jnp.einsum("bln,blhp,blh->bhpn", Bc, xdt, dec_end)
+        state = state * jnp.exp(cum[:, -1, :])[:, :, None, None] + s_new
+        return state, y_intra + y_inter
+
+    if state0 is None:
+        state0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    # checkpoint: backward recomputes the (L, L) intra-chunk kernel rather
+    # than saving one per chunk
+    final_state, yr = jax.lax.scan(jax.checkpoint(chunk_step), state0,
+                                   (xr, dtr, Br, Cr))
+    y = yr.swapaxes(0, 1).reshape(Bsz, S_eff, H, P)[:, :S]
+    return y, final_state
+
+
+def mamba_block_full(p, u: jax.Array, cfg: ModelConfig,
+                     state0=None) -> Tuple[jax.Array, MambaCache]:
+    """Full-sequence Mamba2 block. Returns (out, cache for decode)."""
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    Bsz, S, _ = u.shape
+    h = L.rms_norm(u, p["ln"])
+    zxbcdt = h @ p["in_proj"].astype(h.dtype)
+    z, xBC_raw, dt = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv_full(xBC_raw.astype(jnp.float32),
+                            p["conv_w"].astype(jnp.float32),
+                            p["conv_b"].astype(jnp.float32))
+    x = xBC[..., :di].reshape(Bsz, S, H, P)
+    Bm = xBC[..., di:di + N]
+    Cm = xBC[..., di + N:]
+    x = shard(x, "batch", None, "heads", None)
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, final_state = _ssd_chunk_scan(x.astype(jnp.float32), dt_s, Bm, Cm, A,
+                                     cfg.ssm_chunk,
+                                     state0)
+    y = y + x.astype(jnp.float32) * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(Bsz, S, di)
+    y = L.rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype), p["gn"])
+    out = y @ p["out_proj"].astype(u.dtype)
+    # decode cache: last W-1 conv inputs + final ssm state
+    W = cfg.conv_width
+    tail = xBC_raw[:, -(W - 1):, :]
+    pad = max(0, (W - 1) - S)
+    if pad:
+        tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+    cache = MambaCache(conv=tail.astype(cfg.cdtype),
+                       ssm=final_state.astype(jnp.float32))
+    return u + shard(out, "batch", None, None), cache
+
+
+def mamba_block_decode(p, u: jax.Array, cache: MambaCache,
+                       cfg: ModelConfig) -> Tuple[jax.Array, MambaCache]:
+    """Single-token recurrent step. u: (B, 1, d)."""
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    Bsz = u.shape[0]
+    h = L.rms_norm(u, p["ln"])
+    zxbcdt = (h @ p["in_proj"].astype(h.dtype))[:, 0]     # (B, ...)
+    z, xBC_raw, dt = _split_proj(cfg, zxbcdt)
+    # conv over [cache.conv ; xBC_raw]
+    W = cfg.conv_width
+    win = jnp.concatenate([cache.conv.astype(jnp.float32),
+                           xBC_raw[:, None, :].astype(jnp.float32)], axis=1)
+    w = p["conv_w"].astype(jnp.float32)
+    xBC = jax.nn.silu((win * w[None]).sum(1) + p["conv_b"].astype(jnp.float32))
+    new_conv = win[:, 1:].astype(cfg.cdtype)
+    x = xBC[:, :di].reshape(Bsz, H, P)
+    Bm = xBC[:, di:di + N]
+    Cm = xBC[:, di + N:]
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt_s * A)                                  # (B, H)
+    state = cache.ssm * dA[:, :, None, None] + jnp.einsum(
+        "bn,bhp,bh->bhpn", Bm, x, dt_s)
+    y = jnp.einsum("bn,bhpn->bhp", Cm, state)
+    y = y + x * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(Bsz, 1, di)
+    y = L.rms_norm((y * jax.nn.silu(z.astype(jnp.float32))[:, None]).astype(u.dtype),
+                   p["gn"])
+    out = y @ p["out_proj"].astype(u.dtype)
+    return u + out, MambaCache(conv=new_conv, ssm=state)
+
+
+class MambaLM:
+    """Pure-SSM LM (mamba2-370m)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "embed": dense_init(k1, (cfg.vocab, cfg.d_model), cfg.pdtype,
+                                fan_in=cfg.d_model),
+            "head": dense_init(k2, (cfg.d_model, cfg.vocab), cfg.pdtype),
+            "final_ln": jnp.zeros((cfg.d_model,), cfg.pdtype),
+            "layers": stacked(lambda k: init_mamba_params(k, cfg), k3,
+                              cfg.n_layers),
+        }
+
+    def backbone(self, params, x, *, remat=False, collect_cache=False):
+        cfg = self.cfg
+
+        def body(xc, p_l):
+            xn, cache = mamba_block_full(p_l, xc, cfg)
+            return xn, (cache if collect_cache else None)
+
+        f = jax.checkpoint(body) if remat else body
+        return jax.lax.scan(f, x, params["layers"])
+
+    def loss(self, params, batch, *, remat=True, ce_chunk=512, **_):
+        tokens, labels = batch["tokens"], batch["labels"]
+        x = params["embed"].astype(self.cfg.cdtype)[tokens]
+        x = shard(x, "batch", None, None)
+        x, _ = self.backbone(params, x, remat=remat)
+        x = L.rms_norm(x, params["final_ln"])
+        return chunked_ce(x, params["head"], labels, chunk=ce_chunk)
+
+    def prefill(self, params, tokens=None, embeds=None, max_len=None, **_):
+        cfg = self.cfg
+        x = params["embed"].astype(cfg.cdtype)[tokens]
+        x, caches = self.backbone(params, x, collect_cache=True)
+        x = L.rms_norm(x[:, -1:], params["final_ln"])
+        logits = (x @ params["head"].astype(x.dtype)).astype(jnp.float32)[:, 0]
+        return logits, caches
+
+    def init_cache(self, B, max_len=None):
+        cfg = self.cfg
+        one = MambaCache(
+            conv=jnp.zeros((B, cfg.conv_width - 1, _conv_dim(cfg)), cfg.cdtype),
+            ssm=jnp.zeros((B, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                          jnp.float32))
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), one)
+
+    def decode_step(self, params, caches, tokens, **_):
+        cfg = self.cfg
+        x = params["embed"].astype(cfg.cdtype)[tokens[:, None]]
+
+        def body(xc, inp):
+            p_l, c_l = inp
+            xn, c_new = mamba_block_decode(p_l, xc, c_l, cfg)
+            return xn, c_new
+
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+        x = L.rms_norm(x, params["final_ln"])
+        logits = (x @ params["head"].astype(x.dtype)).astype(jnp.float32)[:, 0]
+        return logits, new_caches

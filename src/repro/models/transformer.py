@@ -1,0 +1,440 @@
+"""Decoder-only transformer LM: dense / MoE / gemma3-pattern / VLM backbone.
+
+One class covers four assigned families:
+- dense GQA (smollm, internlm2, stablelm)
+- MoE FFN (moonshot 64e top-6, llama4-scout 16e top-1) via models/moe.py
+- gemma3 5:1 local:global sliding-window pattern (grouped layer scan so local
+  layers keep window-sized ring KV caches — the memory point of the pattern)
+- qwen2-vl backbone (M-RoPE, stubbed patch embeddings in, text decode out)
+
+Layers are stacked and scanned (`lax.scan`) so HLO size is O(1) in depth;
+training wraps the scanned body in ``jax.checkpoint``. Cross-entropy is
+computed in sequence chunks so the (B, S, V) logits tensor never materializes
+(important for 262k vocabs at 4k×256 tokens).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.common import ModelConfig, dense_init, stacked
+from repro.models.moe import init_moe_params, moe_ffn
+from repro.sharding import shard
+
+
+class DecodeCaches(NamedTuple):
+    """Per-model KV cache bundle (layout depends on the layer pattern)."""
+    layers: dict          # pattern-specific pytree of KVCache stacks
+    length: jax.Array     # int32: tokens already in cache
+
+
+jax.tree_util.register_pytree_node(
+    DecodeCaches,
+    lambda c: ((c.layers, c.length), None),
+    lambda _, l: DecodeCaches(*l),
+)
+
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        # gemma3-style grouping
+        if cfg.local_per_global > 0:
+            period = cfg.local_per_global + 1
+            self.n_groups = cfg.n_layers // period
+            self.n_extra_local = cfg.n_layers - self.n_groups * period
+        else:
+            self.n_groups = 0
+            self.n_extra_local = 0
+
+    # ------------------------------------------------------------------
+    # params
+    # ------------------------------------------------------------------
+    def _init_layer(self, key):
+        cfg = self.cfg
+        d = cfg.d_model
+        ks = jax.random.split(key, 8)
+        p = {
+            "ln1": jnp.zeros((d,), cfg.pdtype),
+            "wq": dense_init(ks[0], (d, cfg.q_dim), cfg.pdtype),
+            "wk": dense_init(ks[1], (d, cfg.kv_dim), cfg.pdtype),
+            "wv": dense_init(ks[2], (d, cfg.kv_dim), cfg.pdtype),
+            "wo": dense_init(ks[3], (cfg.q_dim, d), cfg.pdtype),
+            "ln2": jnp.zeros((d,), cfg.pdtype),
+        }
+        if cfg.family == "moe":
+            p["moe"] = init_moe_params(ks[4], cfg)
+        elif cfg.act == "silu":
+            p["w1"] = dense_init(ks[4], (d, cfg.d_ff), cfg.pdtype)
+            p["w3"] = dense_init(ks[5], (d, cfg.d_ff), cfg.pdtype)
+            p["w2"] = dense_init(ks[6], (cfg.d_ff, d), cfg.pdtype)
+        else:
+            p["w1"] = dense_init(ks[4], (d, cfg.d_ff), cfg.pdtype)
+            p["w2"] = dense_init(ks[6], (cfg.d_ff, d), cfg.pdtype)
+        return p
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        k_emb, k_head, k_layers, k_extra = jax.random.split(key, 4)
+        params = {
+            "embed": dense_init(k_emb, (cfg.vocab, cfg.d_model), cfg.pdtype,
+                                fan_in=cfg.d_model),
+            "head": dense_init(k_head, (cfg.d_model, cfg.vocab), cfg.pdtype),
+            "final_ln": jnp.zeros((cfg.d_model,), cfg.pdtype),
+        }
+        if self.n_groups > 0:
+            lpg = cfg.local_per_global
+
+            def init_group(k):
+                kl, kg = jax.random.split(k)
+                return {
+                    "local": stacked(self._init_layer, kl, lpg),
+                    "global": self._init_layer(kg),
+                }
+
+            params["groups"] = stacked(init_group, k_layers, self.n_groups)
+            if self.n_extra_local:
+                params["extra_local"] = stacked(self._init_layer, k_extra,
+                                                self.n_extra_local)
+        else:
+            params["layers"] = stacked(self._init_layer, k_layers, cfg.n_layers)
+        return params
+
+    # ------------------------------------------------------------------
+    # blocks
+    # ------------------------------------------------------------------
+    def _project_qkv(self, p, h, positions, mrope_positions):
+        cfg = self.cfg
+        B, S, _ = h.shape
+        q = (h @ p["wq"].astype(h.dtype)).reshape(B, S, cfg.n_heads, cfg.head_dim)
+        k = (h @ p["wk"].astype(h.dtype)).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ p["wv"].astype(h.dtype)).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.mrope_sections != (0, 0, 0) and mrope_positions is not None:
+            q = L.apply_mrope(q, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+            k = L.apply_mrope(k, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+        if self.cfg.use_sp:
+            q = shard(q, "batch", "seq_sp", None, None)
+        else:
+            q = shard(q, "batch", None, "heads", None)
+            k = shard(k, "batch", None, "kv_heads", None)
+            v = shard(v, "batch", None, "kv_heads", None)
+        return q, k, v
+
+    @property
+    def _seq_axis(self):
+        return "seq_sp" if self.cfg.use_sp else None
+
+    def _attn_full(self, p, x, positions, window, mrope_positions, chunk):
+        """Full-sequence attention (train / prefill); returns (x, (k, v)).
+
+        With cfg.use_sp the residual stream is sequence-sharded over 'model':
+        q (and all per-token tensors) stay seq-sharded, while k/v are
+        constrained to full-sequence (XLA inserts the SP all-gather) — each
+        device then computes only its query-shard's attention.
+        """
+        cfg = self.cfg
+        h = L.rms_norm(x, p["ln1"])
+        q, k, v = self._project_qkv(p, h, positions, mrope_positions)
+        if cfg.use_sp:
+            q = shard(q, "batch", "seq_sp", None, None)
+            k = shard(k, "batch", None, None, None)
+            v = shard(v, "batch", None, None, None)
+        if (window > 0 and cfg.local_attn_fast_path and not cfg.use_sp
+                and x.shape[1] > window):
+            o = L.local_window_attention(q, k, v, window=window)
+        else:
+            o = L.blockwise_attention(q, k, v, causal=True, window=window,
+                                      chunk=chunk)
+        o = o.reshape(*x.shape[:2], -1) @ p["wo"].astype(x.dtype)
+        return x + shard(o, "batch", self._seq_axis, None), (k, v)
+
+    def _attn_decode(self, p, x, cache: L.KVCache, length, window,
+                     mrope_positions, chunk):
+        """Single-token attention against a cache; returns (x, new_cache)."""
+        B = x.shape[0]
+        pos = jnp.broadcast_to(length, (B, 1)).astype(jnp.int32)
+        mpos = None
+        if mrope_positions is not None:
+            mpos = jnp.broadcast_to(length, (3, B, 1)).astype(jnp.int32)
+        h = L.rms_norm(x, p["ln1"])
+        q, k, v = self._project_qkv(p, h, pos, mpos)
+        new_cache = L.cache_update_decode(cache._replace(length=length), k, v)
+        S_max = cache.k.shape[1]
+        kv_len = jnp.minimum(length + 1, S_max)
+        o = L.blockwise_attention(q, new_cache.k, new_cache.v, causal=False,
+                                  kv_len=kv_len, chunk=chunk)
+        o = o.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)
+        return x + o, new_cache
+
+    def _ffn(self, p, x):
+        cfg = self.cfg
+        h = L.rms_norm(x, p["ln2"])
+        if cfg.family == "moe":
+            y, aux = moe_ffn(p["moe"], h, cfg)
+        elif cfg.act == "silu":
+            h = shard(h, "batch", self._seq_axis, None)
+            y = L.swiglu(h, p["w1"].astype(x.dtype), p["w3"].astype(x.dtype),
+                         p["w2"].astype(x.dtype))
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            y = L.gelu_mlp(h, p["w1"].astype(x.dtype), p["w2"].astype(x.dtype))
+            aux = jnp.zeros((), jnp.float32)
+        return x + shard(y, "batch", self._seq_axis, None), aux
+
+    def _layer_full(self, p, x, positions, window, mrope_positions, chunk):
+        x, kv = self._attn_full(p, x, positions, window, mrope_positions, chunk)
+        x, aux = self._ffn(p, x)
+        return x, aux, kv
+
+    def _layer_decode(self, p, x, cache, length, window, mrope_positions, chunk):
+        x, new_cache = self._attn_decode(p, x, cache, length, window,
+                                         mrope_positions, chunk)
+        x, aux = self._ffn(p, x)
+        return x, aux, new_cache
+
+    # ------------------------------------------------------------------
+    # full-sequence forward (train / prefill)
+    # ------------------------------------------------------------------
+    def _embed(self, params, tokens=None, embeds=None):
+        cfg = self.cfg
+        if embeds is not None:
+            x = embeds.astype(cfg.cdtype)
+        else:
+            x = params["embed"].astype(cfg.cdtype)[tokens]
+        return shard(x, "batch", self._seq_axis, None)
+
+    def backbone(self, params, x, positions, mrope_positions=None, *,
+                 remat: bool = False, collect_kv: bool = False,
+                 chunk: int = 1024):
+        """Runs all layers; returns (x, aux_sum, kv_stacks or None)."""
+        cfg = self.cfg
+
+        def body(carry, p_l, window):
+            xc, aux = carry
+            xn, a, kv = self._layer_full(p_l, xc, positions, window,
+                                         mrope_positions, chunk)
+            return (xn, aux + a), (kv if collect_kv else None)
+
+        def scan_layers(x, aux, stack, window):
+            f = functools.partial(body, window=window)
+            if remat:
+                f = jax.checkpoint(f)
+            return jax.lax.scan(f, (x, aux), stack)
+
+        aux = jnp.zeros((), jnp.float32)
+        if self.n_groups > 0:
+            w = cfg.sliding_window
+
+            def group_body(carry, g):
+                xc, auxc = carry
+                (xc, auxc), kv_loc = scan_layers(xc, auxc, g["local"], w)
+                f = functools.partial(body, window=0)
+                if remat:
+                    f = jax.checkpoint(f)
+                (xc, auxc), kv_glob = f((xc, auxc), g["global"])
+                return (xc, auxc), (kv_loc, kv_glob)
+
+            (x, aux), kv_groups = jax.lax.scan(group_body, (x, aux),
+                                               params["groups"])
+            kv_extra = None
+            if self.n_extra_local:
+                (x, aux), kv_extra = scan_layers(x, aux, params["extra_local"], w)
+            kv = {"groups": kv_groups, "extra": kv_extra}
+        else:
+            (x, aux), kv = scan_layers(x, aux, params["layers"], 0)
+        return x, aux, kv
+
+    def logits_last(self, params, x):
+        """Logits for the final position only (prefill output)."""
+        cfg = self.cfg
+        h = L.rms_norm(x[:, -1:], params["final_ln"])
+        return (h @ params["head"].astype(h.dtype)).astype(jnp.float32)[:, 0]
+
+    def loss(self, params, batch, *, remat: bool = True,
+             ce_chunk: int = 512, attn_chunk: int = 1024):
+        """Mean next-token CE. batch: tokens (B,S) + labels (B,S) [+ embeds
+        (B,S,d) + mrope_positions (3,B,S) for stub-frontend families]."""
+        cfg = self.cfg
+        tokens = batch.get("tokens")
+        embeds = batch.get("embeds")
+        labels = batch["labels"]
+        B, S = labels.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = self._embed(params, tokens, embeds)
+        x, aux, _ = self.backbone(params, x, positions,
+                                  batch.get("mrope_positions"),
+                                  remat=remat, chunk=attn_chunk)
+        x = L.rms_norm(x, params["final_ln"])
+        ce = chunked_ce(x, params["head"], labels, chunk=ce_chunk)
+        return ce + 0.01 * aux
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+    def init_cache(self, B: int, max_len: int) -> DecodeCaches:
+        cfg = self.cfg
+        dt = cfg.cdtype
+        kvs = (cfg.n_kv_heads, cfg.head_dim)
+
+        def kv(s):
+            return L.KVCache(jnp.zeros((B, s, *kvs), dt),
+                             jnp.zeros((B, s, *kvs), dt),
+                             jnp.zeros((), jnp.int32))
+
+        if self.n_groups > 0:
+            w = min(cfg.sliding_window, max_len)
+            layers = {
+                "groups": (
+                    jax.tree.map(lambda x: jnp.broadcast_to(
+                        x, (self.n_groups, cfg.local_per_global) + x.shape).copy(),
+                        kv(w)),
+                    jax.tree.map(lambda x: jnp.broadcast_to(
+                        x, (self.n_groups,) + x.shape).copy(), kv(max_len)),
+                ),
+                "extra": jax.tree.map(lambda x: jnp.broadcast_to(
+                    x, (self.n_extra_local,) + x.shape).copy(), kv(w))
+                if self.n_extra_local else None,
+            }
+        else:
+            layers = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(),
+                kv(max_len))
+        return DecodeCaches(layers=layers, length=jnp.zeros((), jnp.int32))
+
+    def prefill(self, params, tokens=None, embeds=None, mrope_positions=None,
+                *, max_len: Optional[int] = None, attn_chunk: int = 1024):
+        """Full-sequence forward that also builds decode caches."""
+        cfg = self.cfg
+        if tokens is not None:
+            B, S = tokens.shape
+        else:
+            B, S = embeds.shape[:2]
+        max_len = max_len or S
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = self._embed(params, tokens, embeds)
+        x, _, kv = self.backbone(params, x, positions, mrope_positions,
+                                 remat=False, collect_kv=True, chunk=attn_chunk)
+        caches = self._kv_to_caches(kv, S, max_len)
+        return self.logits_last(params, x), caches
+
+    def _ring_from_tail(self, k, S, w):
+        """Build a ring cache from the last `w` of a (B, S, kv, hd) array."""
+        if S <= w:
+            pad = w - S
+            return jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        tail = k[:, S - w:]
+        return jnp.roll(tail, shift=(S - w) % w, axis=1)
+
+    def _kv_to_caches(self, kv, S: int, max_len: int) -> DecodeCaches:
+        cfg = self.cfg
+        length = jnp.asarray(S, jnp.int32)
+
+        def full_cache(kv_pair):
+            k, v = kv_pair  # (L..., B, S, kv, hd)
+            pad = max_len - S
+            kp = jnp.pad(k, [(0, 0)] * (k.ndim - 3) + [(0, pad), (0, 0), (0, 0)])
+            vp = jnp.pad(v, [(0, 0)] * (v.ndim - 3) + [(0, pad), (0, 0), (0, 0)])
+            lens = jnp.full(k.shape[: k.ndim - 4], S, jnp.int32)
+            return L.KVCache(kp, vp, lens)
+
+        def ring_cache(kv_pair, w):
+            k, v = kv_pair
+            ring = functools.partial(self._ring_from_tail, S=S, w=w)
+            lead = k.ndim - 4
+            fn = ring
+            for _ in range(lead):
+                fn = jax.vmap(fn)
+            lens = jnp.full(k.shape[:lead], S, jnp.int32)
+            return L.KVCache(fn(k), fn(v), lens)
+
+        if self.n_groups > 0:
+            w = min(cfg.sliding_window, max_len)
+            kv_loc, kv_glob = kv["groups"]
+            layers = {
+                "groups": (ring_cache(kv_loc, w), full_cache(kv_glob)),
+                "extra": ring_cache(kv["extra"], w) if self.n_extra_local else None,
+            }
+        else:
+            layers = full_cache(kv)
+        return DecodeCaches(layers=layers, length=length)
+
+    def decode_step(self, params, caches: DecodeCaches, tokens,
+                    *, attn_chunk: int = 4096):
+        """One token for every sequence. tokens: (B,) int32."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        length = caches.length
+        x = self._embed(params, tokens[:, None])
+        mrope = (jnp.broadcast_to(length, (3, B, 1)).astype(jnp.int32)
+                 if cfg.mrope_sections != (0, 0, 0) else None)
+
+        def body(xc, p_l, cache_l, window):
+            xn, _, new_cache = self._layer_decode(p_l, xc, cache_l, length,
+                                                  window, mrope, attn_chunk)
+            return xn, new_cache
+
+        if self.n_groups > 0:
+            w = cfg.sliding_window
+            loc_c, glob_c = caches.layers["groups"]
+
+            def group_body(xc, inputs):
+                g, lc, gc = inputs
+
+                def local_body(xc2, inp):
+                    p_l, c_l = inp
+                    return body(xc2, p_l, c_l, w)
+
+                xc, new_lc = jax.lax.scan(local_body, xc, (g["local"], lc))
+                xc, new_gc = body(xc, g["global"], gc, 0)
+                return xc, (new_lc, new_gc)
+
+            x, (new_loc, new_glob) = jax.lax.scan(group_body, x,
+                                                  (params["groups"], loc_c, glob_c))
+            new_extra = None
+            if self.n_extra_local:
+                def extra_body(xc, inp):
+                    p_l, c_l = inp
+                    return body(xc, p_l, c_l, w)
+                x, new_extra = jax.lax.scan(extra_body, x,
+                                            (params["extra_local"],
+                                             caches.layers["extra"]))
+            layers = {"groups": (new_loc, new_glob), "extra": new_extra}
+        else:
+            def layer_body(xc, inp):
+                p_l, c_l = inp
+                return body(xc, p_l, c_l, 0)
+
+            x, layers = jax.lax.scan(layer_body, x,
+                                     (params["layers"], caches.layers))
+        logits = self.logits_last(params, x)
+        return logits, DecodeCaches(layers=layers, length=length + 1)
+
+
+def chunked_ce(x: jax.Array, head: jax.Array, labels: jax.Array,
+               chunk: int = 512) -> jax.Array:
+    """Cross-entropy without materializing (B, S, V): scan over S chunks."""
+    B, S, d = x.shape
+    n = max(1, S // chunk)
+    chunk = S // n
+    assert S % chunk == 0, "seq len must divide ce chunk count"
+    xc = x.reshape(B, n, chunk, d).swapaxes(0, 1)        # (n, B, c, d)
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)      # (n, B, c)
+
+    def step(tot, inp):
+        xb, lb = inp
+        logits = (xb @ head.astype(xb.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return tot + (lse - gold).sum(), None
+
+    # checkpoint: never keep a chunk's (B, c, V) logits for backward
+    tot, _ = jax.lax.scan(jax.checkpoint(step), jnp.zeros((), jnp.float32),
+                          (xc, lc))
+    return tot / (B * S)

@@ -1,0 +1,2 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               cosine_schedule, clip_by_global_norm)

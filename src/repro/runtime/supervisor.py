@@ -1,0 +1,119 @@
+"""Fault-tolerant training runtime: restart-from-latest supervision,
+straggler detection, failure injection for tests.
+
+On a real fleet the Supervisor wraps the per-host main(): any step exception
+(device loss, preemption, injected fault) falls back to the latest complete
+checkpoint and replays. Because the data pipeline is deterministic in step
+(data/synthetic.py) and checkpoints carry the optimizer step, recovery is
+bitwise-reproducible. The StragglerMonitor implements the mitigation that is
+actionable from inside a step loop — detect the slow host from step-time
+outliers and surface it to the scheduler (on CPU we log; on a fleet this
+triggers hot-swap of the straggler).
+"""
+from __future__ import annotations
+
+import collections
+import logging
+import time
+from typing import Callable, Optional
+
+from repro.checkpoint import (latest_step, restore_checkpoint,
+                              save_checkpoint, AsyncCheckpointer)
+
+log = logging.getLogger("repro.runtime")
+
+
+class FailureInjector:
+    """Deterministic fault injection: raise at the given steps (once each)."""
+
+    def __init__(self, fail_at_steps=()):
+        self.remaining = set(fail_at_steps)
+
+    def maybe_fail(self, step: int):
+        if step in self.remaining:
+            self.remaining.discard(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+class StragglerMonitor:
+    """Flags steps slower than ``threshold`` × rolling median."""
+
+    def __init__(self, window: int = 32, threshold: float = 2.0):
+        self.times = collections.deque(maxlen=window)
+        self.threshold = threshold
+        self.flagged = []
+
+    def record(self, step: int, seconds: float) -> bool:
+        is_straggler = False
+        if len(self.times) >= 8:
+            med = sorted(self.times)[len(self.times) // 2]
+            if seconds > self.threshold * med:
+                is_straggler = True
+                self.flagged.append((step, seconds, med))
+                log.warning("straggler: step %d took %.3fs (median %.3fs)",
+                            step, seconds, med)
+        self.times.append(seconds)
+        return is_straggler
+
+
+class Supervisor:
+    """Run ``n_steps`` of ``step_fn`` with checkpoint/restart fault tolerance.
+
+    step_fn: (state, step:int) -> state          (jit'd train step closure)
+    state:   any pytree (params, opt, ef, ...)
+    """
+
+    def __init__(self, ckpt_dir: str, *, ckpt_every: int = 50,
+                 max_restarts: int = 10, async_ckpt: bool = False,
+                 injector: Optional[FailureInjector] = None):
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.injector = injector
+        self.monitor = StragglerMonitor()
+        self.async_ckpt = AsyncCheckpointer(ckpt_dir) if async_ckpt else None
+        self.restarts = 0
+
+    def _save(self, step: int, state):
+        if self.async_ckpt:
+            self.async_ckpt.save(step, state)
+        else:
+            save_checkpoint(self.ckpt_dir, step, state)
+
+    def run(self, init_state, step_fn: Callable, n_steps: int,
+            shardings=None):
+        state = init_state
+        start = 0
+        last = latest_step(self.ckpt_dir)
+        if last is not None:
+            state = restore_checkpoint(self.ckpt_dir, last, init_state,
+                                       shardings)
+            start = last
+            log.info("resumed from checkpoint step %d", last)
+        step = start
+        while step < n_steps:
+            try:
+                t0 = time.perf_counter()
+                if self.injector:
+                    self.injector.maybe_fail(step)
+                state = step_fn(state, step)
+                self.monitor.record(step, time.perf_counter() - t0)
+                step += 1
+                if step % self.ckpt_every == 0 or step == n_steps:
+                    self._save(step, state)
+            except Exception as e:  # node failure path
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                log.warning("step %d failed (%s); restarting from latest "
+                            "checkpoint (restart %d)", step, e, self.restarts)
+                last = latest_step(self.ckpt_dir)
+                if last is None:
+                    state, step = init_state, 0
+                else:
+                    state = restore_checkpoint(self.ckpt_dir, last, init_state,
+                                               shardings)
+                    step = last
+        if self.async_ckpt:
+            self.async_ckpt.close()
+        return state, step

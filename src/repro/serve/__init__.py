@@ -1,0 +1,3 @@
+from repro.serve.kv_quant import (QuantKVCache, quantize_kv, dequantize_kv,
+                                  quant_cache_update_decode,
+                                  attention_with_quant_cache)

@@ -1,0 +1,2 @@
+from repro.sharding.api import (shard, set_mesh, get_mesh, mesh_context,
+                                logical_to_physical, RULES)

@@ -1,0 +1,88 @@
+"""Sharding rules and the in-model constraint helper.
+
+Models are written against *logical* axes (batch, seq, heads, dff, vocab,
+experts, …). ``RULES`` maps logical axes to mesh axes; ``shard(x, *logical)``
+applies a ``with_sharding_constraint`` when a mesh context is active and is a
+no-op otherwise (single-device smoke tests).
+
+Default mapping (FSDP×TP, MaxText-style):
+  batch    -> data        heads/dff/vocab/experts -> model
+  fsdp     -> data (parameter second-dim sharding = ZeRO-3 gather-at-use)
+  pod      -> composes with data for gradient reduction (hierarchical DP)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+RULES = {
+    "batch": "data",
+    "fsdp": "data",
+    "seq": None,          # sequence kept unsharded by default (SP opt-in)
+    "seq_sp": "model",    # SP: residual-stream sequence dim on the TP axis
+    "heads": "model",
+    "kv_heads": "model",
+    "dff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "capacity": "data",
+    "d_model": None,
+    "head_dim": None,
+    "state": None,
+}
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _state.mesh = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh):
+    prev = get_mesh()
+    set_mesh(mesh)
+    try:
+        yield mesh
+    finally:
+        set_mesh(prev)
+
+
+def logical_to_physical(*logical: Optional[str]) -> P:
+    """Translate logical axis names to a PartitionSpec under RULES. A logical
+    axis of None (or one that maps to None) stays unsharded. When the mesh
+    has a 'pod' axis, 'batch'/'fsdp' shard over ('pod','data') jointly."""
+    mesh = get_mesh()
+    pod = mesh is not None and "pod" in mesh.axis_names
+    out = []
+    for name in logical:
+        ax = RULES.get(name) if name else None
+        if ax == "data" and pod and name in ("batch", "fsdp"):
+            out.append(("pod", "data"))
+        else:
+            out.append(ax)
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constraint ``x`` to the logical spec if a mesh context is active."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_physical(*logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(*logical: Optional[str]) -> Optional[NamedSharding]:
+    mesh = get_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_to_physical(*logical))

@@ -1,0 +1,145 @@
+"""Name-based parameter/batch/cache PartitionSpec rules (FSDP×TP).
+
+Specs are derived from leaf *names* (the dict key path), padded with None for
+leading stack dims (layers/groups). A spec axis is dropped whenever it does
+not evenly divide the corresponding dimension — batch=1 long-context cells
+simply replicate over 'data' instead of failing to lower.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+# trailing-dim logical rules per parameter name: each entry lists the spec for
+# the LAST ndim dims (None-padded at the front for layer stacks).
+def _rules(dp):
+    return {
+        "embed": (("model", dp)),          # (vocab, d): vocab-parallel
+        "head": ((dp, "model")),           # (d, vocab)
+        "wq": ((dp, "model")),
+        "wk": ((dp, "model")),
+        "wv": ((dp, "model")),
+        "wo": (("model", dp)),
+        "w1": ((dp, "model")),
+        "w3": ((dp, "model")),
+        "w2": (("model", dp)),
+        "router": ((dp, None)),
+        "we1": (("model", dp, None)),      # (E, d, ff)
+        "we3": (("model", dp, None)),
+        "we2": (("model", None, dp)),      # (E, ff, d)
+        "in_proj": ((dp, "model")),
+        "out_proj": (("model", dp)),
+        "conv_w": ((None, None)),
+        "conv_b": ((None,)),
+        "A_log": ((None,)),
+        "D": ((None,)),
+        "dt_bias": ((None,)),
+    }
+
+
+def _leaf_name(path) -> str:
+    names = [k.key for k in path if isinstance(k, jax.tree_util.DictKey)]
+    return names[-1] if names else ""
+
+
+def param_spec(path, leaf, mesh: Mesh) -> P:
+    dp = _dp_axes(mesh)
+    rules = _rules(dp)
+    name = _leaf_name(path)
+    if name in rules:
+        tail = rules[name]
+        if not isinstance(tail, tuple):
+            tail = (tail,)
+        tail = tail[-leaf.ndim:] if len(tail) >= leaf.ndim else tail
+        spec = (None,) * (leaf.ndim - len(tail)) + tuple(tail)
+    else:
+        spec = (None,) * leaf.ndim  # norms & scalars replicated
+    return _validated(spec, leaf.shape, mesh)
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        return int(np.prod([mesh.shape[a] for a in ax]))
+    return mesh.shape[ax]
+
+
+def _validated(spec, shape, mesh: Mesh) -> P:
+    out = []
+    for dim, ax in zip(shape, spec):
+        out.append(ax if ax and dim % _axis_size(mesh, ax) == 0 else None)
+    return P(*out)
+
+
+def params_shardings(params, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf, mesh)),
+        params)
+
+
+def batch_spec(leaf, mesh: Mesh) -> P:
+    """Batch arrays: leading dim is (global) batch -> dp axes; mrope position
+    arrays carry a leading 3-stream dim instead."""
+    dp = _dp_axes(mesh)
+    if leaf.ndim >= 2 and leaf.shape[0] == 3:  # (3, B, S) mrope positions
+        spec = (None, dp) + (None,) * (leaf.ndim - 2)
+    else:
+        spec = (dp,) + (None,) * (leaf.ndim - 1)
+    return _validated(spec, leaf.shape, mesh)
+
+
+def batch_shardings(batch, mesh: Mesh):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, batch_spec(leaf, mesh)), batch)
+
+
+def cache_spec(leaf, cfg, mesh: Mesh, batch: int) -> P:
+    """KV / SSM cache specs, cfg-aware (trailing-shape matched):
+
+      KVCache k/v (..., B, S, Hkv, hd): batch->dp, kv->model if divisible,
+        else head_dim->model (GQA kv < TP width: shard the contraction dim;
+        XLA inserts the score all-reduce).
+      Mamba ssm  (..., B, H, P, N): batch->dp, heads->model.
+      Mamba conv (..., B, W-1, C):  batch->dp, channels->model.
+      lengths / scalars: replicated.
+    """
+    dp = _dp_axes(mesh)
+    if leaf.ndim <= 1:
+        return P()
+    shape = leaf.shape
+    model_n = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    spec = [None] * leaf.ndim
+
+    def mark(idx_from_end: int, ax):
+        spec[leaf.ndim - idx_from_end] = ax
+
+    if (leaf.ndim >= 4 and shape[-2] == cfg.n_kv_heads
+            and shape[-1] == cfg.head_dim and cfg.n_kv_heads > 0):
+        mark(4, dp)  # batch
+        if cfg.n_kv_heads % model_n == 0:
+            mark(2, "model")
+        elif cfg.head_dim % model_n == 0:
+            mark(1, "model")
+    elif (leaf.ndim >= 4 and cfg.ssm_state > 0 and shape[-1] == cfg.ssm_state
+          and shape[-2] == cfg.ssm_head_dim):
+        mark(4, dp)
+        mark(3, "model")
+    elif leaf.ndim >= 3 and shape[-3] == batch:
+        mark(3, dp)
+        mark(1, "model")
+    return _validated(tuple(spec), shape, mesh)
+
+
+def cache_shardings(cache_tree, cfg, mesh: Mesh, batch: int):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, cache_spec(leaf, cfg, mesh, batch)),
+        cache_tree)

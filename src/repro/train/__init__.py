@@ -1,0 +1,3 @@
+from repro.train.step import (make_train_step, make_prefill_step,
+                              make_decode_step, make_compressed_train_step,
+                              init_ef_state, TrainHParams)

@@ -1,0 +1,180 @@
+"""Step builders: train (pjit FSDP×TP), serve (prefill/decode), and the
+paper-technique path: compressed-gradient training (top-k + SpKAdd sparse
+allreduce over the data axis, via shard_map).
+
+The standard path relies on XLA SPMD: batch sharded over data ⇒ gradient
+reduction lowers to reduce-scatter/all-reduce automatically. The compressed
+path makes the reduction explicit so the collective itself is the paper's
+SpKAdd (schedules: gather_kway / tree_2way / ring_2way) — it supports
+DP-only meshes (model axis folded away), which is the paper's sparse
+allreduce setting; composing sparse-DP with TP is plumbing, not science, and
+is documented in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.allreduce import compressed_gradient_mean
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    remat: bool = True
+    ce_chunk: int = 512
+    attn_chunk: int = 1024
+    grad_accum: int = 1   # microbatches per step (activation memory / N)
+    accum_dtype: str = "float32"  # bfloat16 halves grad-reduce traffic
+
+
+def make_train_step(model, hp: TrainHParams = TrainHParams()) -> Callable:
+    compute_dtype = model.cfg.cdtype
+
+    def train_step(params, opt_state, batch):
+        # Cast OUTSIDE value_and_grad and differentiate w.r.t. the bf16 copy:
+        # FSDP all-gathers (fwd + remat recompute) AND the cross-device
+        # gradient reductions then move bf16, not fp32 — 2× on parameter
+        # collective traffic. Accumulation/optimizer stay fp32.
+        params_c = jax.tree.map(
+            lambda x: x.astype(compute_dtype)
+            if x.dtype == jnp.float32 else x, params)
+
+        def loss_fn(pc, b):
+            return model.loss(pc, b, remat=hp.remat, ce_chunk=hp.ce_chunk,
+                              attn_chunk=hp.attn_chunk)
+
+        if hp.grad_accum > 1:
+            # split the global batch into microbatches and scan, accumulating
+            # fp32 grads — the standard activation-memory / batch trade.
+            n = hp.grad_accum
+
+            # mrope positions carry a leading (3,) dim: split on axis 1
+            def micro_leaf(x):
+                if x.ndim >= 2 and x.shape[0] == 3:  # (3, B, S)
+                    return jnp.moveaxis(
+                        x.reshape(3, n, x.shape[1] // n, *x.shape[2:]), 1, 0)
+                return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+            mb = jax.tree.map(micro_leaf, batch)
+
+            adt = jnp.dtype(hp.accum_dtype)
+
+            def acc_step(carry, b):
+                tot_loss, acc = carry
+                loss, g = jax.value_and_grad(loss_fn)(params_c, b)
+                acc = jax.tree.map(lambda a, x: a + x.astype(adt), acc, g)
+                return (tot_loss + loss, acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, adt), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), zeros), mb)
+            loss = loss / n
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.float32) / n, grads)
+        else:
+            loss, grads = jax.value_and_grad(
+                lambda pc: loss_fn(pc, batch))(params_c)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        lr = cosine_schedule(opt_state.step, peak_lr=hp.peak_lr,
+                             warmup=hp.warmup, total=hp.total_steps)
+        new_params, new_state, gnorm = adamw_update(
+            params, grads, opt_state, lr=lr,
+            weight_decay=hp.weight_decay, max_grad_norm=hp.max_grad_norm)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model, attn_chunk: int = 1024) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params,
+                             tokens=batch.get("tokens"),
+                             embeds=batch.get("embeds"),
+                             attn_chunk=attn_chunk)
+
+    return prefill_step
+
+
+def make_decode_step(model, attn_chunk: int = 4096) -> Callable:
+    def decode_step(params, caches, tokens):
+        return model.decode_step(params, caches, tokens, attn_chunk=attn_chunk)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# the paper's technique as a first-class training feature
+# ---------------------------------------------------------------------------
+
+def init_ef_state(params, n_workers: int):
+    """Error-feedback residuals: one flat fp32 residual per worker per leaf
+    (global arrays (P, size), sharded P('data') at use)."""
+    return jax.tree.map(
+        lambda p: jnp.zeros((n_workers, p.size), jnp.float32), params)
+
+
+def make_compressed_train_step(model, mesh: Mesh,
+                               hp: TrainHParams = TrainHParams(), *,
+                               k_fraction: float = 0.01,
+                               schedule: str = "gather_kway",
+                               selector: str = "block") -> Callable:
+    """DP training with top-k sparsified gradients reduced via SpKAdd.
+
+    Mesh must expose a 'data' axis; params/optimizer are replicated across it
+    (pure DP — the paper's sparse-allreduce setting). Returns a jit-able
+    fn(params, opt_state, ef, batch) -> (params, opt_state, ef, metrics).
+    """
+    n_workers = mesh.shape["data"]
+
+    def local_step(params, opt_state, ef, batch):
+        # leaves arrive with a leading local-shard dim of 1
+        params = jax.tree.map(lambda x: x, params)
+
+        def loss_fn(p):
+            return model.loss(p, batch, remat=hp.remat, ce_chunk=hp.ce_chunk,
+                              attn_chunk=hp.attn_chunk)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        residuals = jax.tree.map(lambda r: r[0], ef)
+        mean_grads, new_res = compressed_gradient_mean(
+            grads, residuals, "data", k_fraction, schedule=schedule,
+            selector=selector)
+        loss = jax.lax.pmean(loss, "data")
+        lr = cosine_schedule(opt_state.step, peak_lr=hp.peak_lr,
+                             warmup=hp.warmup, total=hp.total_steps)
+        new_params, new_state, gnorm = adamw_update(
+            params, mean_grads, opt_state, lr=lr,
+            weight_decay=hp.weight_decay, max_grad_norm=hp.max_grad_norm)
+        new_ef = jax.tree.map(lambda r: r[None], new_res)
+        return new_params, new_state, new_ef, {"loss": loss, "grad_norm": gnorm}
+
+    rep = P()
+
+    def specs_like(tree, spec):
+        return jax.tree.map(lambda _: spec, tree)
+
+    def step(params, opt_state, ef, batch):
+        f = jax.shard_map(
+            local_step, mesh=mesh,
+            in_specs=(specs_like(params, rep), specs_like(opt_state, rep),
+                      specs_like(ef, P("data")), specs_like(batch, P("data"))),
+            out_specs=(specs_like(params, rep), specs_like(opt_state, rep),
+                       specs_like(ef, P("data")),
+                       {"loss": rep, "grad_norm": rep}),
+            check_vma=False)
+        return f(params, opt_state, ef, batch)
+
+    return step

@@ -1,0 +1,128 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def make_stream(rng, m, n, nnz, pad, dup_frac=0.5):
+    """(keys, vals) with controlled duplicate fraction + sentinel padding."""
+    uniq = rng.choice(m * n, size=max(1, int(nnz * (1 - dup_frac))),
+                      replace=False)
+    dups = rng.choice(uniq, size=nnz - len(uniq), replace=True) if \
+        nnz > len(uniq) else np.empty((0,), np.int64)
+    keys = np.concatenate([uniq, dups]).astype(np.int32)
+    rng.shuffle(keys)
+    vals = rng.standard_normal(len(keys)).astype(np.float32)
+    keys = np.concatenate([keys, np.full(pad, m * n, np.int32)])
+    vals = np.concatenate([vals, np.zeros(pad, np.float32)])
+    return jnp.asarray(keys), jnp.asarray(vals)
+
+
+@pytest.mark.parametrize("m,n,nnz,block_rows,chunk", [
+    (32, 8, 50, 8, 16),
+    (64, 16, 300, 16, 64),
+    (128, 4, 100, 32, 128),     # chunk > nnz: padding path
+    (56, 12, 200, 8, 32),       # m not a block multiple
+    (8, 8, 64, 64, 16),         # block > m
+])
+def test_spa_accumulate_sweep(m, n, nnz, block_rows, chunk):
+    rng = np.random.default_rng(hash((m, n, nnz)) % 2**31)
+    keys, vals = make_stream(rng, m, n, nnz, pad=13)
+    got = ops.spa_accumulate(keys, vals, m=m, n=n,
+                             block_rows=min(block_rows, m), chunk=chunk)
+    want = ref.spa_accumulate_ref(keys, vals, m=m, n=n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_spa_accumulate_dtypes(dtype):
+    rng = np.random.default_rng(7)
+    m, n = 32, 8
+    keys, vals = make_stream(rng, m, n, 80, pad=0)
+    got = ops.spa_accumulate(keys, vals.astype(dtype), m=m, n=n,
+                             block_rows=8, chunk=32)
+    want = ref.spa_accumulate_ref(keys, vals.astype(dtype), m=m, n=n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-6)
+
+
+def _dense_of(keys, vals, size):
+    f = np.zeros(size + 1, np.float64)
+    np.add.at(f, np.minimum(np.asarray(keys), size), np.asarray(vals, np.float64))
+    return f[:size]
+
+
+@pytest.mark.parametrize("m,n,nnz,table", [
+    (32, 8, 60, None),
+    (64, 16, 300, None),
+    (16, 4, 30, 256),      # explicit oversize table
+    (64, 64, 1000, None),  # heavy duplicates
+])
+def test_hash_accumulate_sweep(m, n, nnz, table):
+    rng = np.random.default_rng(hash((m, n, nnz, 1)) % 2**31)
+    keys, vals = make_stream(rng, m, n, nnz, pad=9, dup_frac=0.7)
+    sent = m * n
+    hk, hv, hn = ops.hash_accumulate(keys, vals, sent=sent, table_size=table)
+    rk, rv, rn = ref.hash_accumulate_ref(keys, vals, sent=sent)
+    assert int(hn) == int(rn)
+    np.testing.assert_allclose(_dense_of(hk, hv, sent), _dense_of(rk, rv, sent),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_hash_symbolic_sweep():
+    rng = np.random.default_rng(11)
+    for m, n, nnz in [(16, 4, 20), (64, 8, 200), (32, 32, 500)]:
+        keys, _ = make_stream(rng, m, n, nnz, pad=5, dup_frac=0.6)
+        got = ops.hash_symbolic(keys, sent=m * n)
+        want = ref.hash_symbolic_ref(keys, sent=m * n)
+        assert int(got) == int(want)
+
+
+def test_hash_all_same_key():
+    """Worst-case collision chain: every entry hits one slot."""
+    keys = jnp.full((64,), 7, jnp.int32)
+    vals = jnp.ones((64,), jnp.float32)
+    hk, hv, hn = ops.hash_accumulate(keys, vals, sent=1000)
+    assert int(hn) == 1
+    assert float(hv.sum()) == 64.0
+
+
+def test_hash_empty():
+    keys = jnp.full((16,), 100, jnp.int32)  # all sentinel
+    vals = jnp.zeros((16,), jnp.float32)
+    _, _, hn = ops.hash_accumulate(keys, vals, sent=100)
+    assert int(hn) == 0
+    assert int(ops.hash_symbolic(keys, sent=100)) == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(4, 64), n=st.integers(1, 12),
+       nnz=st.integers(1, 150), seed=st.integers(0, 2**16))
+def test_property_spa_equals_hash(m, n, nnz, seed):
+    """Both accumulators produce the same dense sum (paper: SPA ≡ hash)."""
+    rng = np.random.default_rng(seed)
+    nnz = min(nnz, m * n * 2)
+    keys, vals = make_stream(rng, m, n, nnz, pad=3, dup_frac=0.5)
+    dense_spa = np.asarray(ops.spa_accumulate(keys, vals, m=m, n=n,
+                                              block_rows=8, chunk=32))
+    hk, hv, _ = ops.hash_accumulate(keys, vals, sent=m * n)
+    dense_hash = _dense_of(hk, hv, m * n).reshape(n, m).T
+    np.testing.assert_allclose(dense_spa, dense_hash, rtol=1e-4, atol=1e-5)
+
+
+def test_choose_block_rows_vmem_budget():
+    """Sliding formula: parts = ceil(bytes/VMEM) ⇒ block fits the budget."""
+    from repro.kernels.ops import choose_block_rows
+    m, n = 1 << 20, 64
+    budget = 1 << 20  # 1 MiB
+    br = choose_block_rows(m, n, budget)
+    assert br * n * 4 <= budget * 1.01 + 8 * n * 4
+    assert br >= 8
+    # huge budget: single part
+    assert choose_block_rows(128, 8, 1 << 30) == 128

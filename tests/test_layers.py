@@ -1,0 +1,103 @@
+"""Attention-layer unit tests: blockwise vs quadratic reference, windows,
+decode, banded local fast path, RoPE/M-RoPE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+def _qkv(seed, B, Sq, Skv, Hq, Hkv, D):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (B, Sq, Hq, D)),
+            jax.random.normal(ks[1], (B, Skv, Hkv, D)),
+            jax.random.normal(ks[2], (B, Skv, Hkv, D)))
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+@pytest.mark.parametrize("window", [0, 8])
+def test_blockwise_matches_reference(chunk, window):
+    q, k, v = _qkv(0, 2, 48, 48, 8, 4, 32)
+    o1 = L.blockwise_attention(q, k, v, causal=True, window=window, chunk=chunk)
+    o2 = L.attention_ref(q, k, v, causal=True, window=window)
+    # blockwise path uses a bf16 PV matmul by design: bf16-level tolerance
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=3e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("S,window", [(40, 8), (64, 16), (33, 8), (16, 16)])
+def test_local_window_banded_matches_reference(S, window):
+    q, k, v = _qkv(1, 2, S, S, 4, 2, 16)
+    o1 = L.local_window_attention(q, k, v, window=window)
+    o2 = L.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_decode_against_cache_prefix():
+    q, k, v = _qkv(2, 2, 1, 64, 8, 4, 32)
+    for kv_len, q_off in [(5, 4), (33, 32), (64, 63)]:
+        o1 = L.blockwise_attention(q, k, v, causal=True, q_offset=q_off,
+                                   kv_len=kv_len, chunk=16)
+        o2 = L.attention_ref(q, k, v, causal=True, q_offset=q_off,
+                             kv_len=kv_len)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=3e-2, atol=2e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), sq=st.integers(1, 32),
+       skv=st.integers(1, 48))
+def test_property_blockwise_any_shape(seed, sq, skv):
+    q, k, v = _qkv(seed, 1, sq, skv, 4, 4, 16)
+    o1 = L.blockwise_attention(q, k, v, causal=False, chunk=16)
+    o2 = L.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=3e-2, atol=2e-2)
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE attention scores depend only on relative positions."""
+    B, S, H, D = 1, 8, 2, 32
+    q, k, _ = _qkv(3, B, S, S, H, H, D)
+    pos = jnp.tile(jnp.arange(S), (B, 1))
+    q1 = L.apply_rope(q, pos, 1e4)
+    k1 = L.apply_rope(k, pos, 1e4)
+    q2 = L.apply_rope(q, pos + 100, 1e4)
+    k2 = L.apply_rope(k, pos + 100, 1e4)
+    s1 = jnp.einsum("bqhd,bkhd->bhqk", q1, k1)
+    s2 = jnp.einsum("bqhd,bkhd->bhqk", q2, k2)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_mrope_reduces_to_rope_on_text():
+    q, _, _ = _qkv(4, 2, 12, 12, 4, 4, 32)
+    pos = jnp.tile(jnp.arange(12), (2, 1))
+    mpos = jnp.stack([pos] * 3)
+    a = L.apply_mrope(q, mpos, (8, 4, 4), 1e4)
+    b = L.apply_rope(q, pos, 1e4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_ring_cache_decode_wraps():
+    """Ring (sliding-window) cache: after wrap, attention sees exactly the
+    last W keys."""
+    B, W, Hkv, D = 1, 4, 2, 8
+    cache = L.KVCache(jnp.zeros((B, W, Hkv, D)), jnp.zeros((B, W, Hkv, D)),
+                      jnp.zeros((), jnp.int32))
+    ks = jax.random.split(jax.random.PRNGKey(5), 10)
+    keys = [jax.random.normal(k, (B, 1, Hkv, D)) for k in ks]
+    for t, kk in enumerate(keys):
+        cache = L.cache_update_decode(cache._replace(length=jnp.asarray(t)),
+                                      kk, kk)
+    # cache should now hold keys[6..9] in ring order
+    held = set()
+    for slot in range(W):
+        for t in range(6, 10):
+            if np.allclose(np.asarray(cache.k[:, slot]), np.asarray(keys[t][:, 0])):
+                held.add(t)
+    assert held == {6, 7, 8, 9}

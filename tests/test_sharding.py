@@ -1,0 +1,74 @@
+"""Sharding-rule unit tests: param/batch/cache PartitionSpecs (pure logic,
+validated on a 512-device mesh in a subprocess)."""
+
+
+def test_param_specs_fsdp_tp(multidevice):
+    multidevice(r"""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_production_mesh
+from repro.sharding.params import param_spec, batch_spec, cache_spec
+from repro.configs import get_config
+
+mesh = make_production_mesh()
+DK = jax.tree_util.DictKey
+
+def spec_of(name, shape):
+    leaf = jax.ShapeDtypeStruct(shape, jnp.float32)
+    return param_spec((DK(name),), leaf, mesh)
+
+# 2D weights: fsdp x tp
+assert spec_of('wq', (4096, 4096)) == P('data', 'model')
+assert spec_of('wo', (4096, 4096)) == P('model', 'data')
+assert spec_of('embed', (262144, 5376)) == P('model', 'data')
+# stacked layer dims pad with None
+assert spec_of('w1', (48, 4096, 16384)) == P(None, 'data', 'model')
+# non-divisible axes are dropped, not errors
+assert spec_of('wq', (4095, 4096)) == P(None, 'model')
+# norms replicated
+assert spec_of('ln1', (4096,)) == P(None)
+# MoE experts on model
+assert spec_of('we1', (48, 64, 2048, 1408)) == P(None, 'model', 'data', None)
+
+# batch: leading dim on (pod+)data
+b = jax.ShapeDtypeStruct((256, 4096), jnp.int32)
+assert batch_spec(b, mesh) == P('data', None)
+# mrope positions: (3, B, S)
+m = jax.ShapeDtypeStruct((3, 256, 4096), jnp.int32)
+assert batch_spec(m, mesh) == P(None, 'data', None)
+# batch=1 replicates instead of failing
+b1 = jax.ShapeDtypeStruct((1, 524288), jnp.int32)
+assert batch_spec(b1, mesh) == P(None, None)
+
+# caches
+cfg = get_config('qwen2_vl_72b')   # kv=8 (non-divisible), head_dim=128
+kv = jax.ShapeDtypeStruct((80, 128, 32768, 8, 128), jnp.bfloat16)
+s = cache_spec(kv, cfg, mesh, batch=128)
+assert s == P(None, 'data', None, None, 'model'), s  # head_dim fallback
+cfg2 = get_config('gemma3_27b')    # kv=16 divisible
+kv2 = jax.ShapeDtypeStruct((10, 128, 32768, 16, 128), jnp.bfloat16)
+s2 = cache_spec(kv2, cfg2, mesh, batch=128)
+assert s2 == P(None, 'data', None, 'model', None), s2
+cfg3 = get_config('mamba2_370m')
+ssm = jax.ShapeDtypeStruct((48, 128, 32, 64, 128), jnp.float32)
+s3 = cache_spec(ssm, cfg3, mesh, batch=128)
+assert s3 == P(None, 'data', 'model', None, None), s3
+print('sharding specs ok')
+""", n_devices=512)
+
+
+def test_multipod_dp_axes(multidevice):
+    multidevice(r"""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_production_mesh
+from repro.sharding.params import param_spec, batch_spec
+DK = jax.tree_util.DictKey
+mesh = make_production_mesh(multi_pod=True)
+leaf = jax.ShapeDtypeStruct((8192, 8192), jnp.float32)
+s = param_spec((DK('wq'),), leaf, mesh)
+assert s == P(('pod', 'data'), 'model'), s  # fsdp composes with pod
+b = jax.ShapeDtypeStruct((256, 4096), jnp.int32)
+assert batch_spec(b, mesh) == P(('pod', 'data'), None)
+print('multipod specs ok')
+""", n_devices=512)

@@ -1,0 +1,149 @@
+"""SpKAdd algorithm family: correctness vs the dense oracle + invariants.
+
+Mirrors the paper's claims: all algorithms compute the same B = Σ A_i; the
+symbolic phase returns exact nnz(B); compression factor cf ≥ 1.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparse as S
+from repro.core.spkadd import (spkadd, symbolic_nnz,
+    symbolic_nnz_per_column, two_way_add)
+
+ALGOS = ["incremental", "tree", "sorted", "spa", "blocked_spa", "hash"]
+
+
+def random_sparse(rng, m, n, nnz, cap):
+    d = np.zeros((m, n), np.float32)
+    nnz = min(nnz, m * n)
+    idx = rng.choice(m * n, size=nnz, replace=False)
+    d.flat[idx] = rng.standard_normal(nnz).astype(np.float32)
+    return d, S.from_dense(jnp.asarray(d), cap=cap)
+
+
+@pytest.mark.parametrize("algorithm", ALGOS)
+@pytest.mark.parametrize("k,m,n,nnz", [(2, 16, 8, 10), (5, 32, 12, 40),
+                                       (8, 64, 4, 30), (3, 8, 8, 64)])
+def test_spkadd_matches_dense(algorithm, k, m, n, nnz):
+    rng = np.random.default_rng(hash((algorithm, k, m, n)) % 2**31)
+    mats, dense = [], np.zeros((m, n), np.float32)
+    for _ in range(k):
+        d, coo = random_sparse(rng, m, n, nnz, cap=nnz + 8)
+        dense += d
+        mats.append(coo)
+    out = spkadd(mats, algorithm=algorithm)
+    np.testing.assert_allclose(np.asarray(out.to_dense()), dense,
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("algorithm", ALGOS)
+def test_spkadd_cancellation(algorithm):
+    """A + (-A) = 0: value-cancelled entries keep structural nnz (matches the
+    paper's structural accounting, where numerics never shrink the pattern)."""
+    rng = np.random.default_rng(0)
+    d, a = random_sparse(rng, 16, 8, 20, cap=32)
+    neg = S.PaddedCOO(a.keys, -a.vals, a.nnz, a.shape)
+    out = spkadd([a, neg], algorithm=algorithm)
+    np.testing.assert_allclose(np.asarray(out.to_dense()),
+                               np.zeros((16, 8)), atol=1e-6)
+
+
+def test_symbolic_exact():
+    rng = np.random.default_rng(1)
+    mats, dense = [], np.zeros((32, 8), np.float32)
+    for _ in range(4):
+        d, coo = random_sparse(rng, 32, 8, 25, cap=30)
+        dense += d
+        mats.append(coo)
+    assert int(symbolic_nnz(mats)) == int((dense != 0).sum())
+    per_col = np.asarray(symbolic_nnz_per_column(mats))
+    np.testing.assert_array_equal(per_col, (dense != 0).sum(0))
+
+
+def test_two_way_add_is_merge():
+    rng = np.random.default_rng(2)
+    da, a = random_sparse(rng, 16, 4, 12, cap=16)
+    db, b = random_sparse(rng, 16, 4, 12, cap=16)
+    out = two_way_add(a, b)
+    assert out.cap == a.cap + b.cap  # worst-case capacity, paper §II-B1
+    np.testing.assert_allclose(np.asarray(out.to_dense()), da + db,
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# property-based invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(2, 6),
+    m=st.integers(4, 40),
+    n=st.integers(1, 10),
+    frac=st.floats(0.05, 0.9),
+    seed=st.integers(0, 2**16),
+)
+def test_property_all_algorithms_agree(k, m, n, frac, seed):
+    rng = np.random.default_rng(seed)
+    nnz = max(1, int(m * n * frac))
+    mats, dense = [], np.zeros((m, n), np.float32)
+    for _ in range(k):
+        d, coo = random_sparse(rng, m, n, nnz, cap=nnz + 4)
+        dense += d
+        mats.append(coo)
+    results = {alg: spkadd(mats, algorithm=alg) for alg in
+               ["tree", "sorted", "spa"]}
+    for alg, out in results.items():
+        np.testing.assert_allclose(np.asarray(out.to_dense()), dense,
+                                   rtol=1e-4, atol=1e-5, err_msg=alg)
+    # structural nnz identical across algorithms and == symbolic phase
+    nnzs = {alg: int(out.nnz) for alg, out in results.items()}
+    assert len(set(nnzs.values())) == 1, nnzs
+    assert int(symbolic_nnz(mats)) == next(iter(nnzs.values()))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(2, 30), n=st.integers(1, 8), frac=st.floats(0.0, 1.0),
+       seed=st.integers(0, 2**16))
+def test_property_compress_idempotent(m, n, frac, seed):
+    rng = np.random.default_rng(seed)
+    nnz = int(m * n * frac)
+    d, a = random_sparse(rng, m, n, max(nnz, 0), cap=max(nnz, 1) + 3)
+    c1 = S.compress(S.concat([a, a]))
+    c2 = S.compress(c1)
+    assert int(c1.nnz) == int(c2.nnz)
+    np.testing.assert_allclose(np.asarray(c1.to_dense()),
+                               np.asarray(c2.to_dense()), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(c1.to_dense()), 2 * d,
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_property_compression_factor(seed):
+    """cf = Σnnz(A_i)/nnz(B) ≥ 1 and nnz(B) ≤ Σ nnz(A_i)."""
+    rng = np.random.default_rng(seed)
+    mats = []
+    total = 0
+    for _ in range(4):
+        d, coo = random_sparse(rng, 24, 6, 20, cap=24)
+        total += int(coo.nnz)
+        mats.append(coo)
+    out = spkadd(mats, algorithm="sorted")
+    assert int(out.nnz) <= total
+    assert total / max(int(out.nnz), 1) >= 1.0
+
+
+def test_unsorted_inputs_ok_for_hash_family():
+    """Paper Table I: SPA/hash accept unsorted inputs; merge paths need
+    sorted. Our sorted/tree paths sort internally so all accept unsorted."""
+    rng = np.random.default_rng(3)
+    d, a = random_sparse(rng, 16, 4, 12, cap=16)
+    perm = rng.permutation(a.cap)
+    shuffled = S.PaddedCOO(a.keys[perm], a.vals[perm], a.nnz, a.shape)
+    for alg in ["spa", "hash", "blocked_spa", "sorted"]:
+        out = spkadd([shuffled, a], algorithm=alg)
+        np.testing.assert_allclose(np.asarray(out.to_dense()), 2 * d,
+                                   rtol=1e-5, atol=1e-6, err_msg=alg)

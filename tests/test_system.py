@@ -1,0 +1,67 @@
+"""End-to-end behaviour tests: the launchers and examples actually run."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=560, env_extra=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    if env_extra:
+        env.update(env_extra)
+    proc = subprocess.run([sys.executable] + args, env=env, cwd=REPO,
+                          capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, f"{args}\n{proc.stdout}\n{proc.stderr}"
+    return proc.stdout
+
+
+def test_quickstart_example():
+    out = _run(["examples/quickstart.py"])
+    assert "all algorithms agree" in out
+
+
+def test_train_launcher_smoke():
+    subprocess.run(["rm", "-rf", "/tmp/test_sys_ckpt_a"], check=True)
+    out = _run(["-m", "repro.launch.train", "--arch", "smollm-135m",
+                "--smoke", "--steps", "12", "--ckpt-every", "6",
+                "--ckpt-dir", "/tmp/test_sys_ckpt_a"])
+    assert "finished at step 12" in out
+
+
+def test_train_launcher_resume():
+    """Kill after 8 steps (checkpoint at 6), relaunch, must resume not restart."""
+    ckpt = "/tmp/test_sys_ckpt_resume"
+    subprocess.run(["rm", "-rf", ckpt], check=True)
+    _run(["-m", "repro.launch.train", "--arch", "smollm-135m", "--smoke",
+          "--steps", "8", "--ckpt-every", "4", "--ckpt-dir", ckpt])
+    out = _run(["-m", "repro.launch.train", "--arch", "smollm-135m", "--smoke",
+                "--steps", "12", "--ckpt-every", "4", "--ckpt-dir", ckpt])
+    assert "finished at step 12" in out
+
+
+def test_serve_launcher_smoke():
+    out = _run(["-m", "repro.launch.serve", "--arch", "internlm2-1.8b",
+                "--smoke", "--tokens", "6"])
+    assert "ms/token" in out
+
+
+def test_train_100m_example_short():
+    subprocess.run(["rm", "-rf", "/tmp/test_sys_100m"], check=True)
+    out = _run(["examples/train_100m.py", "--steps", "6", "--batch", "2",
+                "--seq", "64", "--ckpt-dir", "/tmp/test_sys_100m"])
+    assert "done: 6 steps" in out
+
+
+def test_train_100m_compressed():
+    subprocess.run(["rm", "-rf", "/tmp/test_sys_100m_c"], check=True)
+    out = _run(["examples/train_100m.py", "--steps", "4", "--batch", "4",
+                "--seq", "32", "--compress", "--k-fraction", "0.1",
+                "--ckpt-dir", "/tmp/test_sys_100m_c"],
+               env_extra={"XLA_FLAGS":
+                          "--xla_force_host_platform_device_count=4"})
+    assert "done: 4 steps" in out
+    assert "sparse-allreduce" in out
