@@ -3,20 +3,42 @@
 The paper's finding: hash/sliding-hash (here: spa/sorted — the TPU-native
 one-touch accumulators) win everywhere for ER; 2-way tree only competes at
 very small k on skewed (RMAT) inputs.
+
+With ``--dump-cost-model PATH`` the measured per-cell winners calibrate the
+regime engine's dispatch table (``repro.core.engine``): the boundary between
+the tree / SPA / merge regions is re-fit to the current hardware and dumped
+as JSON that ``engine.load_cost_model`` (and thus ``spkadd_auto``) consumes.
 """
 from __future__ import annotations
 
+import argparse
 import functools
 
 import jax
 
 from benchmarks.common import emit, gen_collection, time_fn
+from repro.core import engine
 from repro.core.spkadd import spkadd
 
 ALGOS = ["incremental", "tree", "sorted", "spa"]
 
 
-def main(m=1024, n=16):
+def _cell_signals(k: int, d: int, m: int, n: int) -> engine.RegimeSignals:
+    """The engine's (static, capacity-based) signals for a grid cell —
+    gen_collection gives every matrix cap = d·n, so no materialization is
+    needed to know what spkadd_auto would dispatch."""
+    total = float(k * d * n)
+    mn = m * n
+    return engine.RegimeSignals(
+        k=k, density=total / mn,
+        compression=engine.estimate_compression(total, mn), accum_elems=mn)
+
+
+def main(m=1024, n=16, dump_cost_model_path: str | None = None):
+    # ((k, aggregate density), winner) pairs — the engine's signal axes.
+    # A list, not a dict: er and rmat measure the same (k, density) cells
+    # and both winners must reach the calibration.
+    cells = []
     for kind in ("er", "rmat"):
         grid = {}
         for k in (2, 4, 8, 16, 32):
@@ -29,11 +51,32 @@ def main(m=1024, n=16):
                     if us < best_us:
                         best, best_us = alg, us
                 grid[(k, d)] = best
+                cells.append(((k, k * d / m), best))
                 emit(f"fig2_{kind}/best/k={k}/d={d}", best_us, best)
         kway_wins = sum(1 for v in grid.values() if v in ("sorted", "spa"))
         emit(f"fig2_{kind}/kway_win_fraction", 100.0 * kway_wins / len(grid),
              "paper: hash family wins almost all cells")
+        # dispatch agreement: how often the engine's static table picks the
+        # measured winner (or a same-family algorithm)
+        agree = 0
+        for (k, d), winner in grid.items():
+            picked = engine.select_algorithm(_cell_signals(k, d, m, n))
+            same_family = {"spa", "blocked_spa", "sorted"}
+            agree += (picked == winner
+                      or (picked in same_family and winner in same_family))
+        emit(f"fig2_{kind}/engine_dispatch_agreement",
+             100.0 * agree / len(grid), "spkadd_auto vs measured winner")
+    if dump_cost_model_path:
+        cm = engine.calibrate_cost_model(cells)
+        engine.dump_cost_model(cm, dump_cost_model_path)
+        emit("fig2/cost_model_dumped", 0.0, dump_cost_model_path)
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=1024)
+    ap.add_argument("--n", type=int, default=16)
+    ap.add_argument("--dump-cost-model", default=None,
+                    help="write the calibrated dispatch table as JSON")
+    args = ap.parse_args()
+    main(m=args.m, n=args.n, dump_cost_model_path=args.dump_cost_model)

@@ -13,6 +13,8 @@ import functools
 import jax
 
 from benchmarks.common import emit, gen_collection, time_fn
+from repro.core.engine import (explain_dispatch, spkadd_auto, spkadd_batched,
+                               stack_collections)
 from repro.core.spkadd import spkadd
 
 ALGOS = ["incremental", "tree", "sorted", "spa"]
@@ -32,6 +34,11 @@ def run(kind: str, m=2048, n=32, ks=(4, 16, 64), ds=(4, 16, 64),
                 rows[(alg, k, d)] = us
                 emit(f"table_{kind}/{alg}/k={k}/d={d}", us,
                      f"nnz_in={k * d * n}")
+            # the engine's pick for this cell, timed under the same harness
+            us = time_fn(jax.jit(spkadd_auto), mats)
+            _, picked = explain_dispatch(mats)
+            rows[("auto", k, d)] = us
+            emit(f"table_{kind}/auto/k={k}/d={d}", us, f"dispatch={picked}")
     # derived: ratio of incremental to sorted at max k (the paper's headline)
     kmax, dmid = max(ks), ds[len(ds) // 2]
     if ("incremental", kmax, dmid) in rows:
@@ -41,9 +48,32 @@ def run(kind: str, m=2048, n=32, ks=(4, 16, 64), ds=(4, 16, 64),
     return rows
 
 
+def run_batched(kind: str, b=8, k=8, m=2048, n=32, d=16):
+    """Batched engine vs a Python loop of per-collection adds: the win is one
+    XLA program (and one dispatch) for all B independent sums."""
+    colls = [gen_collection(kind, k, m, n, d, seed=1000 * i + d)
+             for i in range(b)]
+    stacked = stack_collections(colls)
+
+    batched = jax.jit(spkadd_batched)
+    us_batched = time_fn(batched, stacked)
+    emit(f"table_{kind}/batched/B={b}/k={k}/d={d}", us_batched, "one program")
+
+    auto = jax.jit(spkadd_auto)
+
+    def loop(colls):
+        return [auto(c) for c in colls]
+
+    us_loop = time_fn(loop, colls)
+    emit(f"table_{kind}/loop/B={b}/k={k}/d={d}", us_loop, "python loop")
+    emit(f"table_{kind}/batched_speedup/B={b}", us_loop / max(us_batched, 1e-9),
+         "loop_us / batched_us")
+
+
 def main():
     run("er")
     run("rmat")
+    run_batched("er")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 runner: install pinned deps (best effort — the suite must also pass
+# on a pre-baked image without network), then run the full suite.
+#
+# Usage: scripts/ci.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${CI_SKIP_INSTALL:-0}" != "1" ]]; then
+    python -m pip install -r requirements.txt || \
+        echo "WARN: pip install failed (offline image?); running with baked-in deps"
+fi
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -1,0 +1,60 @@
+"""Version-skew shims for the jax API surface this repo depends on.
+
+Two things drifted across the jax versions we target:
+
+- ``shard_map`` lives at ``jax.experimental.shard_map.shard_map`` up to
+  jax 0.4.x and graduates to ``jax.shard_map`` later; the replication-check
+  kwarg is renamed ``check_rep`` -> ``check_vma`` in the same move.
+- ``Compiled.cost_analysis()`` returns a single dict on newer jax but a
+  *list* of per-computation dicts on 0.4.x, so ``ca["flops"]`` raises
+  ``TypeError`` there.
+
+Import from here instead of feature-testing jax at every call site.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:  # jax >= 0.6: public top-level export
+    _shard_map = jax.shard_map
+except AttributeError:  # jax 0.4.x: experimental home
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_REP_KWARG = ("check_rep" if "check_rep"
+              in inspect.signature(_shard_map).parameters else "check_vma")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+    """``jax.shard_map`` on any supported jax.
+
+    ``check_vma`` follows the new-jax spelling; it is forwarded as
+    ``check_rep`` on jax versions that predate the rename.
+    """
+    if check_vma is not None:
+        kw[_REP_KWARG] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a bound mesh axis (inside ``shard_map``) on any
+    supported jax: ``jax.lax.axis_size`` where it exists, else the axis-env
+    lookup that 0.4.x spells ``jax.core.axis_frame``."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.core.axis_frame(axis_name)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict on any supported jax.
+
+    jax 0.4.x returns ``[dict]`` (one entry per computation; the entry-point
+    computation first) — take element 0. Newer jax returns the dict directly.
+    Returns ``{}`` when the backend reports nothing.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}

@@ -2,13 +2,23 @@
 
 Public API:
 - sparse.PaddedCOO and constructors
-- spkadd.spkadd(mats, algorithm=...) and the algorithm family
+- engine: regime-aware dispatch (spkadd_auto) + batched execution
+  (spkadd_batched) — the preferred entry points
+- spkadd.spkadd(mats, algorithm=...) and the explicit algorithm family
 - topk: gradient sparsification + error feedback
 - allreduce: sparse allreduce schedules (SpKAdd in the collective)
 - spgemm: distributed sparse SUMMA with SpKAdd reduction
 """
 from repro.core.sparse import (PaddedCOO, from_coords, from_dense, make_empty,
-                               compress, concat, sort_by_key, with_capacity)
+                               compress, compress_plan, concat, sort_by_key,
+                               with_capacity)
+from repro.core.engine import (RegimeSignals, regime_signals,
+                               select_algorithm, explain_dispatch,
+                               spkadd_auto, spkadd_batched, spkadd_run,
+                               stack_collections, unstack_collection,
+                               scatter_accumulate, DEFAULT_COST_MODEL,
+                               calibrate_cost_model, dump_cost_model,
+                               load_cost_model)
 from repro.core.spkadd import (ALGORITHMS, spkadd, spkadd_incremental,
                                spkadd_tree, spkadd_sorted, spkadd_spa,
                                spkadd_spa_dense, spkadd_blocked_spa,
@@ -21,7 +31,12 @@ from repro.core.allreduce import (sparse_allreduce, compressed_gradient_mean,
 
 __all__ = [
     "PaddedCOO", "from_coords", "from_dense", "make_empty", "compress",
-    "concat", "sort_by_key", "with_capacity", "ALGORITHMS", "spkadd",
+    "compress_plan", "concat", "sort_by_key", "with_capacity",
+    "RegimeSignals", "regime_signals", "select_algorithm", "explain_dispatch",
+    "spkadd_auto", "spkadd_batched", "spkadd_run", "stack_collections",
+    "unstack_collection", "scatter_accumulate", "DEFAULT_COST_MODEL",
+    "calibrate_cost_model", "dump_cost_model", "load_cost_model",
+    "ALGORITHMS", "spkadd",
     "spkadd_incremental", "spkadd_tree", "spkadd_sorted", "spkadd_spa",
     "spkadd_spa_dense", "spkadd_blocked_spa", "spkadd_hash", "symbolic_nnz",
     "symbolic_nnz_per_column", "two_way_add", "SparseUpdate", "topk_global",

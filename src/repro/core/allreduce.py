@@ -31,11 +31,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import axis_size as _axis_size
+from repro.core.engine import scatter_accumulate
 from repro.core.topk import SparseUpdate, densify
-
-
-def _axis_size(axis: str) -> int:
-    return jax.lax.axis_size(axis)
 
 
 # ---------------------------------------------------------------------------
@@ -44,15 +42,14 @@ def _axis_size(axis: str) -> int:
 
 def allgather_kway(u: SparseUpdate, axis: str) -> jax.Array:
     """All-gather sparse streams, then one local k-way SpKAdd (paper's
-    work-optimal k-way accumulation; k = axis size)."""
+    work-optimal k-way accumulation; k = axis size). The local add is the
+    engine's dense-SPA numeric phase — the same scatter the ``spa`` regime
+    uses, since the optimizer consumes the dense form anyway."""
     idx = jax.lax.all_gather(u.idx, axis)   # (P, s)
     val = jax.lax.all_gather(u.val, axis)   # (P, s)
     p = idx.shape[0]
-    flat_idx = idx.reshape(-1)
-    flat_val = val.reshape(-1)
-    dense = jnp.zeros((u.size + 1,), flat_val.dtype)
-    dense = dense.at[jnp.clip(flat_idx, 0, u.size)].add(flat_val)
-    return dense[: u.size] / p
+    dense = scatter_accumulate(idx.reshape(-1), val.reshape(-1), u.size)
+    return dense / p
 
 
 def halving_2way(u: SparseUpdate, axis: str) -> jax.Array:
@@ -77,9 +74,7 @@ def halving_2way(u: SparseUpdate, axis: str) -> jax.Array:
         idx = jnp.concatenate([idx, o_idx])
         val = jnp.concatenate([val, o_val])
     del me
-    dense = jnp.zeros((u.size + 1,), val.dtype)
-    dense = dense.at[jnp.clip(idx, 0, u.size)].add(val)
-    return dense[: u.size] / p
+    return scatter_accumulate(idx, val, u.size) / p
 
 
 def ring_2way(u: SparseUpdate, axis: str) -> jax.Array:
@@ -98,9 +93,7 @@ def ring_2way(u: SparseUpdate, axis: str) -> jax.Array:
         val = jax.lax.ppermute(val, axis, perm)
         acc_idx = jnp.concatenate([acc_idx, idx])
         acc_val = jnp.concatenate([acc_val, val])
-    dense = jnp.zeros((u.size + 1,), acc_val.dtype)
-    dense = dense.at[jnp.clip(acc_idx, 0, u.size)].add(acc_val)
-    return dense[: u.size] / p
+    return scatter_accumulate(acc_idx, acc_val, u.size) / p
 
 
 SCHEDULES: dict[str, Callable[[SparseUpdate, str], jax.Array]] = {

@@ -1,0 +1,362 @@
+"""Regime-aware SpKAdd engine: auto-dispatch + batched execution.
+
+The paper's central empirical result (Fig. 2, Tables III/IV) is that no
+single SpKAdd algorithm wins everywhere:
+
+- **tiny k**: 2-way tree merging is competitive (few partial sums, the
+  O(k) accumulator setup doesn't amortize);
+- **large k / high aggregate density / high compression factor**: the
+  one-touch hash/SPA family dominates (each input nonzero is touched once,
+  the accumulator cost amortizes over many collisions);
+- **huge accumulators**: the sliding/blocked variant keeps the SPA win by
+  tiling the accumulator through fast memory (paper Alg. 7/8, VMEM here);
+- **everything else**: the k-way merge (here: sort + segment-sum) is the
+  robust fallback.
+
+:func:`spkadd_auto` computes the paper's regime signals — k, aggregate
+density ``sum nnz / (m·n)``, and compression factor ``cf = sum nnz /
+nnz(B)`` — and picks the region's winner from a calibratable cost-model
+table (see DESIGN.md §Engine for the region table;
+``benchmarks/fig2_regions.py --dump-cost-model`` re-measures the boundaries
+on the current hardware and dumps a table this module can load).
+
+**Canonical output contract.** Every engine path returns the *same*
+PaddedCOO bit-for-bit: capacity ``sum_i cap_i``, keys sorted with sentinel
+padding, structural ``nnz`` (value-cancelled keys are kept, as in the
+paper's symbolic/numeric split), and values accumulated in input-stream
+order. This works because the structural layout is computed once by
+:func:`repro.core.sparse.compress_plan` for every regime, and each regime
+only changes *how the per-key value sums are produced*: segment-sum over the
+sorted stream (merge regime), a dense scatter accumulator (SPA regime), or
+the VMEM-tiled Pallas accumulator (blocked regime) — all of which fold each
+key's contributions in the same stream order. Downstream callers can
+therefore swap regimes freely without perturbing checkpoints or tests.
+
+:func:`spkadd_batched` vmaps the engine over a *stack* of B collections
+(shared logical shape and capacities, independent sums) so streaming-graph
+and gradient-accumulation workloads add B collections in one XLA program
+instead of a Python loop.
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse import (PaddedCOO, compress_plan, concat,
+                               sentinel_key)
+from repro.core import spkadd as _alg
+
+
+# ---------------------------------------------------------------------------
+# regime signals (paper Fig. 2 axes)
+# ---------------------------------------------------------------------------
+
+class RegimeSignals(NamedTuple):
+    """The paper's dispatch axes, static at trace time.
+
+    ``density`` and ``compression`` are *capacity-based estimates* by default
+    (capacities are the a-priori nnz bounds and the only static information
+    under jit); :func:`regime_signals` can compute exact values from concrete
+    inputs when available.
+    """
+
+    k: int               # number of input matrices
+    density: float       # aggregate input density: sum nnz / (m*n)
+    compression: float   # cf = sum nnz / nnz(B)  (>= 1)
+    accum_elems: int     # dense accumulator size m*n (SPA feasibility)
+
+
+def estimate_compression(total_nnz: float, mn: int) -> float:
+    """Expected cf for uniformly random keys (ER model): distinct keys
+    ``≈ mn·(1 − (1 − 1/mn)^N)``, the standard occupancy estimate."""
+    if total_nnz <= 0 or mn <= 0:
+        return 1.0
+    distinct = mn * -math.expm1(total_nnz * math.log1p(-1.0 / mn)) \
+        if mn > 1 else 1.0
+    return max(1.0, total_nnz / max(distinct, 1.0))
+
+
+def regime_signals(mats: Sequence[PaddedCOO],
+                   exact: bool = False) -> RegimeSignals:
+    """Compute the dispatch signals for a collection.
+
+    ``exact=True`` reads concrete ``nnz`` and runs the symbolic phase — only
+    valid outside jit (concrete inputs); the default uses capacities, which
+    keeps :func:`spkadd_auto` fully traceable.
+    """
+    m, n = mats[0].shape
+    mn = m * n
+    k = len(mats)
+    if exact:
+        total = float(sum(int(a.nnz) for a in mats))
+        out_nnz = float(int(_alg.symbolic_nnz(mats)))
+        cf = total / max(out_nnz, 1.0)
+    else:
+        total = float(sum(a.cap for a in mats))
+        cf = estimate_compression(total, mn)
+    return RegimeSignals(k=k, density=total / max(mn, 1), compression=cf,
+                         accum_elems=mn)
+
+
+# ---------------------------------------------------------------------------
+# cost model (Fig. 2 region boundaries; calibratable)
+# ---------------------------------------------------------------------------
+
+#: Region boundaries of the dispatch table. Values are the defaults measured
+#: on the interpret-mode CPU backend; ``benchmarks/fig2_regions.py`` can
+#: re-measure and dump a table for the current hardware.
+DEFAULT_COST_MODEL: Dict[str, float] = {
+    # tree merging only wins for tiny k (Fig. 2 bottom band). Also the k
+    # range where the balanced tree degenerates to a left fold, which is what
+    # keeps the canonical-output contract exact.
+    "tree_max_k": 3,
+    # dense-SPA regime: the accumulator must fit the fast-memory budget and
+    # the scatter must amortize it (aggregate density or compression high).
+    "spa_max_accum_elems": float(1 << 22),   # 16 MiB of f32 accumulator
+    "spa_min_density": 1.0 / 64.0,
+    "spa_min_compression": 1.25,
+    # sliding/blocked-SPA regime: bigger accumulators, still density-bound.
+    "blocked_spa_max_accum_elems": float(1 << 26),
+    "blocked_spa_min_density": 1.0 / 16.0,
+}
+
+
+def select_algorithm(signals: RegimeSignals,
+                     cost_model: Optional[Dict[str, float]] = None) -> str:
+    """Map regime signals to the Fig. 2 region winner."""
+    cm = dict(DEFAULT_COST_MODEL)
+    if cost_model:
+        cm.update(cost_model)
+    if signals.k <= cm["tree_max_k"]:
+        return "tree"
+    spa_worthwhile = (signals.density >= cm["spa_min_density"]
+                      or signals.compression >= cm["spa_min_compression"])
+    if signals.accum_elems <= cm["spa_max_accum_elems"] and spa_worthwhile:
+        return "spa"
+    if (signals.accum_elems <= cm["blocked_spa_max_accum_elems"]
+            and signals.density >= cm["blocked_spa_min_density"]):
+        return "blocked_spa"
+    return "sorted"
+
+
+def calibrate_cost_model(cells) -> Dict[str, float]:
+    """Fit region boundaries from measured per-cell winners.
+
+    ``cells`` is an iterable of ``((k, aggregate_density), winner)`` pairs
+    (or an equivalent dict) as produced by ``benchmarks/fig2_regions.py``.
+    Pairs, not a dict keyed on (k, density): the same cell measured on
+    different sparsity patterns (ER vs RMAT) must contribute *both*
+    winners, not have one silently overwrite the other. Boundaries not
+    identifiable from the sample keep their defaults.
+    """
+    items = list(cells.items()) if hasattr(cells, "items") else list(cells)
+    cm = dict(DEFAULT_COST_MODEL)
+    tree_ks = [k for (k, _), alg in items if alg == "tree"]
+    if tree_ks:
+        cm["tree_max_k"] = max(tree_ks)
+    spa_ds = [d for (_, d), alg in items if alg in ("spa", "blocked_spa")]
+    if spa_ds:
+        cm["spa_min_density"] = min(spa_ds)
+        cm["blocked_spa_min_density"] = min(spa_ds)
+    return cm
+
+
+def dump_cost_model(cm: Dict[str, float], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(cm, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def load_cost_model(path: str) -> Dict[str, float]:
+    with open(path) as f:
+        loaded = json.load(f)
+    cm = dict(DEFAULT_COST_MODEL)
+    cm.update(loaded)
+    return cm
+
+
+# ---------------------------------------------------------------------------
+# canonical execution paths
+# ---------------------------------------------------------------------------
+
+def scatter_accumulate(keys: jax.Array, vals: jax.Array,
+                       length: int) -> jax.Array:
+    """Dense SPA numeric phase: fold a (key, val) stream into a flat
+    accumulator of ``length`` slots, in stream order. Keys outside
+    ``[0, length)`` (sentinels) land in a discard slot.
+
+    This is the one scatter every dense consumer shares — the engine's SPA
+    regime, the sparse-allreduce k-way schedule, and ``to_dense`` semantics.
+    """
+    safe = jnp.clip(keys, 0, length)
+    acc = jnp.zeros((length + 1,), vals.dtype).at[safe].add(vals)
+    return acc[:length]
+
+
+def _canonical_from_flat(cat: PaddedCOO, flat: jax.Array) -> PaddedCOO:
+    """Pair the canonical structural layout of ``cat`` with per-key values
+    gathered from a dense accumulator ``flat`` (col-major, ``flat[key]``)."""
+    plan = compress_plan(cat.keys, cat.shape)
+    sent = sentinel_key(cat.shape)
+    gather_keys = jnp.where(plan.out_keys != sent, plan.out_keys, 0)
+    out_vals = jnp.where(jnp.arange(cat.cap) < plan.nnz,
+                         flat[gather_keys], 0.0).astype(cat.vals.dtype)
+    return PaddedCOO(keys=plan.out_keys, vals=out_vals, nnz=plan.nnz,
+                     shape=cat.shape)
+
+
+def _run_spa(mats: Sequence[PaddedCOO]) -> PaddedCOO:
+    """SPA regime: one-touch dense scatter for the numeric phase, canonical
+    structural layout for the output."""
+    cat = concat(mats)
+    m, n = cat.shape
+    flat = scatter_accumulate(cat.keys, cat.vals, m * n)
+    return _canonical_from_flat(cat, flat)
+
+
+def _run_blocked_spa(mats: Sequence[PaddedCOO],
+                     vmem_budget_bytes: int = 16 * 1024 * 1024,
+                     interpret: bool = True) -> PaddedCOO:
+    """Sliding-SPA regime: the Pallas VMEM-tiled accumulator produces the
+    dense numeric phase; output layout is canonical."""
+    from repro.kernels import ops as kops  # kernels are optional deps
+
+    cat = concat(mats)
+    m, n = cat.shape
+    flat = kops.spa_accumulate_flat(cat.keys, cat.vals, m=m, n=n,
+                                    vmem_budget_bytes=vmem_budget_bytes,
+                                    interpret=interpret)
+    return _canonical_from_flat(cat, flat)
+
+
+def _run_tree(mats: Sequence[PaddedCOO]) -> PaddedCOO:
+    """Tiny-k regime, canonical-contract-preserving for *any* tree_max_k:
+
+    - k=1: ``spkadd_tree`` would return the input uncompressed (no final
+      2-way add), leaking duplicate keys — route through the compress.
+    - k<=3: the balanced tree is a left fold; use it as-is.
+    - k>3 (reachable only via a calibrated/custom ``tree_max_k``): the
+      balanced tree sums pairs as (a+b)+(c+d), not in stream order, so it
+      would break bit-identity — fold left instead (the incremental
+      schedule), which sums every key in stream order. O(k²) data movement
+      is acceptable exactly because this regime only wins at tiny k.
+    """
+    if len(mats) == 1:
+        return _alg.spkadd_sorted(mats)
+    if len(mats) <= 3:
+        return _alg.spkadd_tree(mats)
+    return _alg.spkadd_incremental(mats)
+
+
+#: Engine-canonical paths: every entry returns the same PaddedCOO bitwise
+#: (the per-key value folds all happen in input-stream order).
+_CANONICAL = {
+    "tree": _run_tree,
+    "sorted": lambda mats: _alg.spkadd_sorted(mats),
+    "spa": _run_spa,
+    "blocked_spa": _run_blocked_spa,
+}
+
+
+def spkadd_auto(mats: Sequence[PaddedCOO], *,
+                cost_model: Optional[Dict[str, float]] = None,
+                signals: Optional[RegimeSignals] = None) -> PaddedCOO:
+    """``B = sum_i A_i`` with the regime's winning algorithm.
+
+    Dispatch is static (capacity-based signals), so this function jits and
+    vmaps. Pass ``signals=regime_signals(mats, exact=True)`` outside jit to
+    dispatch on exact nnz/compression instead of the capacity bounds, or
+    ``cost_model=`` a calibrated table (see :func:`load_cost_model`).
+    """
+    sig = signals if signals is not None else regime_signals(mats)
+    return _CANONICAL[select_algorithm(sig, cost_model)](mats)
+
+
+def explain_dispatch(mats: Sequence[PaddedCOO], *,
+                     cost_model: Optional[Dict[str, float]] = None,
+                     exact: bool = False) -> Tuple[RegimeSignals, str]:
+    """(signals, selected algorithm) — observability for callers/tests."""
+    sig = regime_signals(mats, exact=exact)
+    return sig, select_algorithm(sig, cost_model)
+
+
+def spkadd_run(mats: Sequence[PaddedCOO], algorithm: str = "auto",
+               **kw) -> PaddedCOO:
+    """Single entry point for every SpKAdd consumer.
+
+    ``algorithm="auto"`` goes through the regime dispatcher (canonical
+    output); any explicit algorithm name runs the corresponding member of
+    the family from :mod:`repro.core.spkadd` unchanged.
+    """
+    if algorithm == "auto":
+        return spkadd_auto(mats, **kw)
+    return _alg.spkadd(mats, algorithm=algorithm, **kw)
+
+
+# ---------------------------------------------------------------------------
+# batched execution
+# ---------------------------------------------------------------------------
+
+def stack_collections(collections: Sequence[Sequence[PaddedCOO]]
+                      ) -> List[PaddedCOO]:
+    """Stack B same-shaped collections of k matrices into one *batched*
+    collection: k PaddedCOOs whose leaves carry a leading batch dim
+    (keys ``(B, cap)``, vals ``(B, cap)``, nnz ``(B,)``)."""
+    k = len(collections[0])
+    shape = collections[0][0].shape
+    for coll in collections:
+        assert len(coll) == k, "all collections must have the same k"
+        for a in coll:
+            assert a.shape == shape, "stacked collections must share a shape"
+    return [
+        PaddedCOO(
+            keys=jnp.stack([coll[i].keys for coll in collections]),
+            vals=jnp.stack([coll[i].vals for coll in collections]),
+            nnz=jnp.stack([jnp.asarray(coll[i].nnz, jnp.int32)
+                           for coll in collections]),
+            shape=shape,
+        )
+        for i in range(k)
+    ]
+
+
+def unstack_collection(batched: Sequence[PaddedCOO], b: int) -> List[PaddedCOO]:
+    """Slice batch element ``b`` back out of a stacked collection/result."""
+    return [PaddedCOO(a.keys[b], a.vals[b], a.nnz[b], a.shape)
+            for a in batched]
+
+
+def spkadd_batched(stacked_mats: Sequence[PaddedCOO], *,
+                   algorithm: str = "auto",
+                   cost_model: Optional[Dict[str, float]] = None) -> PaddedCOO:
+    """Add B independent collections in one XLA program (vmapped engine).
+
+    ``stacked_mats`` is a batched collection as built by
+    :func:`stack_collections`. Returns a batched PaddedCOO (leading batch
+    dim on every leaf). The dispatch decision is made once for the whole
+    stack (all batches share shapes/capacities, hence regime signals); the
+    sliding-Pallas regime is not vmappable, so a ``blocked_spa`` selection
+    falls back to the dense-SPA path.
+    """
+    if algorithm == "auto":
+        # can't use regime_signals() directly: .cap on a batched leaf reads
+        # the batch dim. Capacity is the trailing axis here.
+        m, n = stacked_mats[0].shape
+        mn = m * n
+        total = float(sum(a.keys.shape[-1] for a in stacked_mats))
+        sig = RegimeSignals(k=len(stacked_mats), density=total / max(mn, 1),
+                            compression=estimate_compression(total, mn),
+                            accum_elems=mn)
+        algorithm = select_algorithm(sig, cost_model)
+    if algorithm == "blocked_spa":
+        algorithm = "spa"  # pallas grid doesn't vmap; same canonical result
+
+    def one(mats):
+        return _CANONICAL[algorithm](mats) if algorithm in _CANONICAL \
+            else _alg.spkadd(mats, algorithm=algorithm)
+
+    return jax.vmap(one)(list(stacked_mats))

@@ -125,6 +125,41 @@ def sort_by_key(a: PaddedCOO) -> PaddedCOO:
     return a._replace(keys=a.keys[order], vals=a.vals[order])
 
 
+class CompressPlan(NamedTuple):
+    """The *structural* half of :func:`compress` — everything that depends on
+    keys only. Factored out so the engine's SPA/blocked-SPA regimes can pair
+    this exact canonical key layout (sorted distinct keys, sentinel padding,
+    structural ``nnz``) with values produced by a dense accumulator instead of
+    a segment-sum, and still emit bit-identical PaddedCOOs.
+    """
+
+    order: jax.Array     # int[cap]  argsort permutation of the input keys
+    gid: jax.Array       # int[cap]  output group id per sorted slot
+    is_new: jax.Array    # bool[cap] first-occurrence flag per sorted slot
+    out_keys: jax.Array  # int32[cap] canonical key layout (sorted + sentinel)
+    nnz: jax.Array       # int32[]   structural distinct-key count
+
+
+def compress_plan(keys: jax.Array, shape: Tuple[int, int]) -> CompressPlan:
+    """Sort keys, flag first occurrences, and lay out the canonical output
+    key array (paper Alg. 6's symbolic phase, vectorized)."""
+    cap = keys.shape[0]
+    sent = sentinel_key(shape)
+    order = jnp.argsort(keys)
+    k_s = keys[order]
+    valid = k_s != sent
+    first = jnp.concatenate([jnp.ones((1,), bool), k_s[1:] != k_s[:-1]])
+    is_new = first & valid
+    # group id for every slot; padding inherits the last group but adds 0.0
+    gid = jnp.clip(jnp.cumsum(is_new) - 1, 0, cap - 1)
+    out_keys = jnp.full((cap,), sent, dtype=jnp.int32)
+    scatter_idx = jnp.where(is_new, gid, cap)  # index cap drops out of range
+    out_keys = out_keys.at[scatter_idx].set(k_s, mode="drop")
+    nnz = is_new.sum().astype(jnp.int32)
+    return CompressPlan(order=order, gid=gid, is_new=is_new,
+                        out_keys=out_keys, nnz=nnz)
+
+
 def compress(a: PaddedCOO) -> PaddedCOO:
     """Combine duplicate keys (sort + segment-sum). Output is key-sorted.
 
@@ -132,25 +167,14 @@ def compress(a: PaddedCOO) -> PaddedCOO:
     capacity stays ``a.cap`` (the symbolic bound), ``nnz`` becomes the exact
     count of distinct keys.
     """
-    sent = sentinel_key(a.shape)
-    order = jnp.argsort(a.keys)
-    k_s = a.keys[order]
-    v_s = a.vals[order]
-    valid = k_s != sent
-    first = jnp.concatenate([jnp.ones((1,), bool), k_s[1:] != k_s[:-1]])
-    is_new = first & valid
-    # group id for every slot; padding inherits the last group but adds 0.0
-    gid = jnp.cumsum(is_new) - 1
-    gid = jnp.clip(gid, 0, a.cap - 1)
-    out_vals = jax.ops.segment_sum(v_s, gid, num_segments=a.cap)
-    out_keys = jnp.full((a.cap,), sent, dtype=jnp.int32)
-    scatter_idx = jnp.where(is_new, gid, a.cap)  # index a.cap drops out of range
-    out_keys = out_keys.at[scatter_idx].set(k_s, mode="drop")
-    nnz = is_new.sum().astype(jnp.int32)
+    plan = compress_plan(a.keys, a.shape)
+    v_s = a.vals[plan.order]
+    out_vals = jax.ops.segment_sum(v_s, plan.gid, num_segments=a.cap)
     # zero padding values beyond nnz (groups past nnz hold only padding sums)
     slot = jnp.arange(a.cap)
-    out_vals = jnp.where(slot < nnz, out_vals, 0.0)
-    return PaddedCOO(keys=out_keys, vals=out_vals, nnz=nnz, shape=a.shape)
+    out_vals = jnp.where(slot < plan.nnz, out_vals, 0.0)
+    return PaddedCOO(keys=plan.out_keys, vals=out_vals, nnz=plan.nnz,
+                     shape=a.shape)
 
 
 def concat(mats, total_cap: int | None = None) -> PaddedCOO:

@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.spkadd import spkadd as _spkadd
+from repro.compat import shard_map
+from repro.core.engine import spkadd_run as _spkadd_run
 from repro.core.sparse import from_dense as _from_dense
 
 
@@ -32,10 +33,15 @@ def local_summa_stage(a_blk: jax.Array, b_blk: jax.Array) -> jax.Array:
     return a_blk @ b_blk
 
 
-def spgemm_summa(a: jax.Array, b: jax.Array, mesh, *, algorithm: str = "sorted",
+def spgemm_summa(a: jax.Array, b: jax.Array, mesh, *, algorithm: str = "auto",
                  partial_cap_per_stage: int | None = None):
     """C = A @ B with A sharded (data, model) and B sharded (data, model) on a
     p_r × p_c grid; partial products reduced via SpKAdd ``algorithm``.
+
+    The reduction goes through the regime engine: the default ``"auto"``
+    lets :func:`repro.core.engine.spkadd_auto` pick the winner for the
+    (k = num_stages, partial density) regime; explicit names select a fixed
+    family member for A/B comparisons.
 
     Returns the dense C (sharded like A) — callers needing sparse C can
     re-sparsify; keeping the reduction sparse is the point being measured.
@@ -60,12 +66,12 @@ def spgemm_summa(a: jax.Array, b: jax.Array, mesh, *, algorithm: str = "sorted",
                 jax.lax.dynamic_slice(b_stripe, (s * blk, 0), (blk, n_loc)),
             )
             partials.append(_from_dense(part, cap=min(cap, m_loc * n_loc)))
-        c_sparse = _spkadd(partials, algorithm=algorithm)
+        c_sparse = _spkadd_run(partials, algorithm=algorithm)
         return c_sparse.to_dense()
 
-    f = jax.shard_map(worker, mesh=mesh,
-                      in_specs=(P("data", "model"), P("data", "model")),
-                      out_specs=P("data", "model"))
+    f = shard_map(worker, mesh=mesh,
+                  in_specs=(P("data", "model"), P("data", "model")),
+                  out_specs=P("data", "model"))
     return f(a, b)
 
 

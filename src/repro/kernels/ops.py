@@ -57,6 +57,23 @@ def spa_accumulate(keys: jax.Array, vals: jax.Array, *, m: int, n: int,
                                    interpret=interpret)
 
 
+def spa_accumulate_flat(keys: jax.Array, vals: jax.Array, *, m: int, n: int,
+                        block_rows: int | None = None,
+                        vmem_budget_bytes: int = 16 * 1024 * 1024,
+                        chunk: int = _spa.DEFAULT_CHUNK,
+                        interpret: bool = True) -> jax.Array:
+    """Sliding blocked-SPA accumulate -> flat (m*n,) f32 in *key order*
+    (col-major), so ``flat[key]`` is the accumulated value of ``key``.
+
+    The form the regime engine consumes: it gathers canonical output values
+    straight out of the accumulator without a dense (m, n) detour.
+    """
+    dense = spa_accumulate(keys, vals, m=m, n=n, block_rows=block_rows,
+                           vmem_budget_bytes=vmem_budget_bytes, chunk=chunk,
+                           interpret=interpret)
+    return dense.T.reshape(-1)
+
+
 @functools.partial(jax.jit, static_argnames=("sent", "table_size", "interpret"))
 def hash_accumulate(keys: jax.Array, vals: jax.Array, *, sent: int,
                     table_size: int | None = None, interpret: bool = True):

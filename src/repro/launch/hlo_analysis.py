@@ -25,6 +25,8 @@ import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from repro.compat import cost_analysis_dict
+
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link
@@ -344,9 +346,7 @@ class Roofline:
 
 
 def analyze_compiled(compiled) -> Roofline:
-    cost_xla = compiled.cost_analysis()
-    if isinstance(cost_xla, list):
-        cost_xla = cost_xla[0]
+    cost_xla = cost_analysis_dict(compiled)
     mem = compiled.memory_analysis()
     analyzer = ModuleAnalyzer(compiled.as_text())
     c = analyzer.cost()

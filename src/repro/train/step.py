@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.allreduce import compressed_gradient_mean
 from repro.optim import adamw_init, adamw_update, cosine_schedule
 
@@ -167,7 +168,7 @@ def make_compressed_train_step(model, mesh: Mesh,
         return jax.tree.map(lambda _: spec, tree)
 
     def step(params, opt_state, ef, batch):
-        f = jax.shard_map(
+        f = shard_map(
             local_step, mesh=mesh,
             in_specs=(specs_like(params, rep), specs_like(opt_state, rep),
                       specs_like(ef, P("data")), specs_like(batch, P("data"))),

@@ -6,6 +6,7 @@ def test_sparse_allreduce_schedules_agree(multidevice):
     multidevice(r"""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from repro.core.topk import topk_global
 from repro.core import allreduce as AR
 
@@ -19,7 +20,7 @@ def worker(g):
     return {s: AR.sparse_allreduce(u, 'data', s)
             for s in ['gather_kway', 'tree_2way', 'ring_2way']}
 
-f = jax.shard_map(worker, mesh=mesh, in_specs=(P('data'),), out_specs=P('data'))
+f = shard_map(worker, mesh=mesh, in_specs=(P('data'),), out_specs=P('data'))
 res = f(jnp.asarray(G))
 expect = np.zeros(size, np.float32)
 for i in range(8):

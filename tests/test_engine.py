@@ -1,0 +1,299 @@
+"""Regime engine: dispatch rules, canonical-output bit-identity across every
+regime, and batched-vs-loop equivalence.
+
+The engine's contract (DESIGN.md §Engine) is stronger than numerical
+agreement: every dispatch regime must return the *same PaddedCOO bitwise* as
+the sorted reference — same key layout, same structural nnz, same
+stream-order value folds — so callers can swap regimes without perturbing
+anything downstream.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from _hyp import given, settings, st  # hypothesis, or fallback shim
+
+from repro.core import sparse as S
+from repro.core import engine as E
+from repro.core.spkadd import spkadd
+
+
+def random_collection(seed, k, m, n, nnz):
+    rng = np.random.default_rng(seed)
+    mats, dense = [], np.zeros((m, n), np.float32)
+    for _ in range(k):
+        d = np.zeros((m, n), np.float32)
+        take = min(nnz, m * n)
+        idx = rng.choice(m * n, take, replace=False)
+        d.flat[idx] = rng.standard_normal(take)
+        dense += d
+        mats.append(S.from_dense(jnp.asarray(d), cap=nnz))
+    return mats, dense
+
+
+def assert_bit_identical(a: S.PaddedCOO, b: S.PaddedCOO, msg=""):
+    assert a.shape == b.shape and a.cap == b.cap, msg
+    assert int(a.nnz) == int(b.nnz), msg
+    np.testing.assert_array_equal(np.asarray(a.keys), np.asarray(b.keys),
+                                  err_msg=msg)
+    # exact float comparison on purpose: the engine promises bit-identity
+    np.testing.assert_array_equal(np.asarray(a.vals), np.asarray(b.vals),
+                                  err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# dispatch rules
+# ---------------------------------------------------------------------------
+
+def test_select_algorithm_regions():
+    cm = E.DEFAULT_COST_MODEL
+    tiny_k = E.RegimeSignals(k=2, density=0.5, compression=2.0,
+                             accum_elems=1024)
+    assert E.select_algorithm(tiny_k) == "tree"
+    spa = E.RegimeSignals(k=16, density=0.5, compression=2.0,
+                          accum_elems=1024)
+    assert E.select_algorithm(spa) == "spa"
+    big_accum = E.RegimeSignals(
+        k=16, density=0.5, compression=2.0,
+        accum_elems=int(cm["spa_max_accum_elems"]) * 2)
+    assert E.select_algorithm(big_accum) == "blocked_spa"
+    hyper_sparse = E.RegimeSignals(
+        k=16, density=1e-6, compression=1.0,
+        accum_elems=int(cm["blocked_spa_max_accum_elems"]) * 2)
+    assert E.select_algorithm(hyper_sparse) == "sorted"
+
+
+def test_cost_model_override_and_roundtrip(tmp_path):
+    sig = E.RegimeSignals(k=8, density=0.5, compression=2.0, accum_elems=1024)
+    assert E.select_algorithm(sig) == "spa"
+    assert E.select_algorithm(sig, {"tree_max_k": 8}) == "tree"
+    path = str(tmp_path / "cm.json")
+    E.dump_cost_model({**E.DEFAULT_COST_MODEL, "tree_max_k": 8}, path)
+    assert E.select_algorithm(sig, E.load_cost_model(path)) == "tree"
+
+
+def test_calibrate_cost_model_from_cells():
+    cells = {(2, 0.01): "tree", (4, 0.02): "tree", (16, 0.05): "spa",
+             (32, 0.5): "spa", (16, 0.001): "sorted"}
+    cm = E.calibrate_cost_model(cells)
+    assert cm["tree_max_k"] == 4
+    assert cm["spa_min_density"] == pytest.approx(0.05)
+
+
+def test_calibrate_cost_model_accepts_duplicate_cells():
+    """ER and RMAT measure the same (k, density) cells with different
+    winners; calibration must see both (pairs, not a last-wins dict)."""
+    cells = [((8, 0.02), "tree"), ((8, 0.02), "spa"), ((2, 0.01), "tree")]
+    cm = E.calibrate_cost_model(cells)
+    assert cm["tree_max_k"] == 8
+    assert cm["spa_min_density"] == pytest.approx(0.02)
+
+
+def test_calibrated_tree_max_k_above_3_keeps_bit_identity():
+    """A calibrated table may extend the tree region past k=3 (RMAT often
+    does); the engine must then fold left rather than balanced so the
+    canonical contract still holds."""
+    mats, _ = random_collection(13, 8, 48, 8, 36)
+    ref = spkadd(mats, algorithm="sorted")
+    out = E.spkadd_auto(mats, cost_model={"tree_max_k": 8})
+    assert E.select_algorithm(E.regime_signals(mats),
+                              {"tree_max_k": 8}) == "tree"
+    assert_bit_identical(ref, out)
+
+
+def test_regime_signals_exact_matches_symbolic():
+    mats, dense = random_collection(0, 4, 32, 8, 30)
+    sig = E.regime_signals(mats, exact=True)
+    total = sum(int(a.nnz) for a in mats)
+    assert sig.k == 4 and sig.accum_elems == 32 * 8
+    assert sig.density == pytest.approx(total / (32 * 8))
+    assert sig.compression == pytest.approx(total / (dense != 0).sum())
+
+
+# ---------------------------------------------------------------------------
+# bit-identity of spkadd_auto vs the sorted reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [2, 8, 32])
+@pytest.mark.parametrize("nnz", [4, 40, 160])
+def test_auto_bit_identical_across_regimes(k, nnz):
+    mats, dense = random_collection(k * 1000 + nnz, k, 64, 8, nnz)
+    ref = spkadd(mats, algorithm="sorted")
+    out = E.spkadd_auto(mats)
+    _, alg = E.explain_dispatch(mats)
+    assert_bit_identical(ref, out, msg=f"k={k} nnz={nnz} dispatched={alg}")
+    np.testing.assert_allclose(np.asarray(out.to_dense()), dense,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_auto_sweep_exercises_multiple_regimes():
+    seen = set()
+    for k in (2, 8, 32):
+        for nnz in (4, 160):
+            mats, _ = random_collection(k + nnz, k, 64, 8, nnz)
+            seen.add(E.explain_dispatch(mats)[1])
+    assert len(seen) >= 2, seen
+
+
+@pytest.mark.parametrize("forced", ["tree", "sorted", "spa", "blocked_spa"])
+def test_forced_regime_bit_identical(forced):
+    """Every canonical path — not just the one dispatch picks — must emit
+    the sorted reference bitwise. Tree is exercised at k=3, the largest k
+    the dispatcher hands it (balanced tree == left fold there)."""
+    k = 3 if forced == "tree" else 8
+    mats, _ = random_collection(42, k, 48, 8, 36)
+    ref = spkadd(mats, algorithm="sorted")
+    out = E._CANONICAL[forced](mats)
+    assert_bit_identical(ref, out, msg=forced)
+
+
+def test_forced_regime_via_cost_model():
+    """The same forcing through the public cost_model knob."""
+    mats, _ = random_collection(9, 8, 48, 8, 36)
+    ref = spkadd(mats, algorithm="sorted")
+    force_spa = {"tree_max_k": 0, "spa_min_density": 0.0,
+                 "spa_min_compression": 1.0}
+    assert_bit_identical(ref, E.spkadd_auto(mats, cost_model=force_spa))
+    force_blocked = {"tree_max_k": 0, "spa_max_accum_elems": 1.0,
+                     "blocked_spa_min_density": 0.0}
+    assert_bit_identical(ref, E.spkadd_auto(mats, cost_model=force_blocked))
+    force_sorted = {"tree_max_k": 0, "spa_max_accum_elems": 1.0,
+                    "blocked_spa_max_accum_elems": 1.0}
+    assert_bit_identical(ref, E.spkadd_auto(mats, cost_model=force_sorted))
+
+
+def test_auto_single_matrix_with_duplicates():
+    """k=1 lands in the tree regime, whose reduction has no final 2-way add
+    — the engine must still dedup (regression: raw passthrough leaked
+    duplicate keys)."""
+    rows = jnp.asarray(np.array([0, 0, 1], np.int32))
+    cols = jnp.asarray(np.array([0, 0, 1], np.int32))
+    vals = jnp.asarray(np.array([1.0, 2.0, 3.0], np.float32))
+    a = S.from_coords(rows, cols, vals, (4, 4))
+    ref = spkadd([a], algorithm="sorted")
+    assert int(ref.nnz) == 2
+    assert_bit_identical(ref, E.spkadd_auto([a]))
+
+
+def test_auto_empty_inputs():
+    mats = [S.make_empty((16, 4), cap=8) for _ in range(8)]
+    ref = spkadd(mats, algorithm="sorted")
+    out = E.spkadd_auto(mats)
+    assert_bit_identical(ref, out)
+    assert int(out.nnz) == 0
+
+
+def test_auto_duplicate_keys_within_matrix():
+    """Inputs need not be deduplicated: repeated coordinates inside one
+    matrix must fold in stream order identically in every regime."""
+    rng = np.random.default_rng(5)
+    m, n, cap = 16, 4, 24
+    mats = []
+    for _ in range(8):
+        rows = rng.integers(0, m, size=cap)
+        cols = rng.integers(0, n, size=cap)  # duplicates very likely
+        vals = rng.standard_normal(cap).astype(np.float32)
+        mats.append(S.from_coords(jnp.asarray(rows), jnp.asarray(cols),
+                                  jnp.asarray(vals), (m, n)))
+    ref = spkadd(mats, algorithm="sorted")
+    for forced in ("sorted", "spa", "blocked_spa"):
+        assert_bit_identical(ref, E._CANONICAL[forced](mats), msg=forced)
+
+
+def test_auto_value_cancellation_keeps_structure():
+    """A + (-A): the engine keeps cancelled keys structurally (nnz counts
+    distinct keys, values are exactly 0) in every regime — the dense-SPA
+    paths must not silently drop them like a |value| re-sparsification
+    would."""
+    rng = np.random.default_rng(6)
+    mats, _ = random_collection(6, 1, 16, 8, 20)
+    a = mats[0]
+    neg = S.PaddedCOO(a.keys, -a.vals, a.nnz, a.shape)
+    ref = spkadd([a, neg] * 4, algorithm="sorted")  # k=8: non-tree regimes
+    assert int(ref.nnz) == int(a.nnz)
+    for forced in ("sorted", "spa", "blocked_spa"):
+        assert_bit_identical(ref, E._CANONICAL[forced]([a, neg] * 4),
+                             msg=forced)
+
+
+def test_auto_under_jit():
+    mats, dense = random_collection(7, 8, 32, 8, 30)
+    out = jax.jit(E.spkadd_auto)(mats)
+    ref = spkadd(mats, algorithm="sorted")
+    assert_bit_identical(ref, out)
+
+
+@settings(max_examples=15, deadline=None)
+@given(k=st.integers(2, 12), m=st.integers(4, 48), n=st.integers(1, 10),
+       frac=st.floats(0.02, 0.9), seed=st.integers(0, 2**16))
+def test_property_auto_equals_sorted(k, m, n, frac, seed):
+    nnz = max(1, int(m * n * frac))
+    mats, _ = random_collection(seed, k, m, n, nnz)
+    ref = spkadd(mats, algorithm="sorted")
+    assert_bit_identical(ref, E.spkadd_auto(mats))
+
+
+# ---------------------------------------------------------------------------
+# batched execution
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm", ["auto", "sorted", "spa"])
+def test_batched_matches_loop(algorithm):
+    B, k, m, n, nnz = 3, 4, 32, 8, 24
+    colls = [random_collection(100 + b, k, m, n, nnz)[0] for b in range(B)]
+    stacked = E.stack_collections(colls)
+    out = E.spkadd_batched(stacked, algorithm=algorithm)
+    assert out.keys.shape == (B, k * nnz)
+    for b in range(B):
+        want = E.spkadd_run(colls[b], algorithm=algorithm)
+        got = E.unstack_collection([out], b)[0]
+        assert_bit_identical(want, got, msg=f"batch {b} alg={algorithm}")
+
+
+def test_batched_under_jit_one_program():
+    B, k = 4, 8
+    colls = [random_collection(200 + b, k, 32, 8, 30)[0] for b in range(B)]
+    stacked = E.stack_collections(colls)
+    out = jax.jit(E.spkadd_batched)(stacked)
+    for b in range(B):
+        want = E.spkadd_auto(colls[b])
+        assert_bit_identical(want, E.unstack_collection([out], b)[0],
+                             msg=f"batch {b}")
+
+
+def test_batched_blocked_spa_falls_back_vmappable():
+    """A blocked_spa selection must not crash the vmapped path."""
+    B, k = 2, 8
+    colls = [random_collection(300 + b, k, 32, 8, 30)[0] for b in range(B)]
+    stacked = E.stack_collections(colls)
+    out = E.spkadd_batched(stacked, algorithm="blocked_spa")
+    for b in range(B):
+        want = spkadd(colls[b], algorithm="sorted")
+        assert_bit_identical(want, E.unstack_collection([out], b)[0])
+
+
+def test_stack_collections_validates():
+    a, _ = random_collection(1, 2, 16, 4, 8)
+    b, _ = random_collection(2, 2, 16, 8, 8)  # different shape
+    with pytest.raises(AssertionError):
+        E.stack_collections([a, b])
+
+
+# ---------------------------------------------------------------------------
+# shared scatter primitive (the allreduce rewire rides on this)
+# ---------------------------------------------------------------------------
+
+def test_scatter_accumulate_matches_bincount_and_drops_sentinels():
+    rng = np.random.default_rng(11)
+    length = 64
+    keys = rng.integers(0, length, size=200).astype(np.int32)
+    vals = rng.standard_normal(200).astype(np.float32)
+    # sentinel slots (key == length) must vanish
+    keys[:17] = length
+    vals_np = vals.copy()
+    vals_np[:17] = 0.0
+    want = np.zeros(length, np.float32)
+    np.add.at(want, keys[keys < length], vals[keys < length])
+    got = np.asarray(E.scatter_accumulate(jnp.asarray(keys),
+                                          jnp.asarray(vals), length))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)

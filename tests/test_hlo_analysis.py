@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import cost_analysis_dict
 from repro.launch.hlo_analysis import ModuleAnalyzer
 
 
@@ -24,8 +25,8 @@ def test_xla_cost_analysis_ignores_trip_count():
         out, _ = jax.lax.scan(body, x, None, length=10)
         return out
 
-    f1 = _compile(one, x, w).cost_analysis()["flops"]
-    f10 = _compile(ten, x, w).cost_analysis()["flops"]
+    f1 = cost_analysis_dict(_compile(one, x, w))["flops"]
+    f10 = cost_analysis_dict(_compile(ten, x, w))["flops"]
     assert f10 / f1 < 2.0  # body counted once: the bug we work around
 
 

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or fallback shim
 
 from repro.core import sparse as S
 from repro.core.spkadd import (spkadd, symbolic_nnz,
