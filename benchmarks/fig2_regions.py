@@ -6,8 +6,11 @@ very small k on skewed (RMAT) inputs.
 
 With ``--dump-cost-model PATH`` the measured per-cell winners calibrate the
 regime engine's dispatch table (``repro.core.engine``): the boundary between
-the tree / SPA / merge regions is re-fit to the current hardware and dumped
-as JSON that ``engine.load_cost_model`` (and thus ``spkadd_auto``) consumes.
+the tree / SPA / vec / merge regions is re-fit to the current hardware
+(including ``vec_min_density``, the lane-parallel accumulator's region) and
+dumped as JSON that ``engine.load_cost_model`` (and thus ``spkadd_auto``)
+consumes — drop the file into ``src/repro/configs/cost_model_default.json``
+or point ``$SPKADD_COST_MODEL`` at it and every dispatch picks it up.
 """
 from __future__ import annotations
 
@@ -20,7 +23,7 @@ from benchmarks.common import emit, gen_collection, time_fn
 from repro.core import engine
 from repro.core.spkadd import spkadd
 
-ALGOS = ["incremental", "tree", "sorted", "spa"]
+ALGOS = ["incremental", "tree", "sorted", "spa", "vec"]
 
 
 def _cell_signals(k: int, d: int, m: int, n: int) -> engine.RegimeSignals:
@@ -53,7 +56,8 @@ def main(m=1024, n=16, dump_cost_model_path: str | None = None):
                 grid[(k, d)] = best
                 cells.append(((k, k * d / m), best))
                 emit(f"fig2_{kind}/best/k={k}/d={d}", best_us, best)
-        kway_wins = sum(1 for v in grid.values() if v in ("sorted", "spa"))
+        kway_wins = sum(1 for v in grid.values()
+                        if v in ("sorted", "spa", "vec"))
         emit(f"fig2_{kind}/kway_win_fraction", 100.0 * kway_wins / len(grid),
              "paper: hash family wins almost all cells")
         # dispatch agreement: how often the engine's static table picks the
@@ -61,7 +65,7 @@ def main(m=1024, n=16, dump_cost_model_path: str | None = None):
         agree = 0
         for (k, d), winner in grid.items():
             picked = engine.select_algorithm(_cell_signals(k, d, m, n))
-            same_family = {"spa", "blocked_spa", "sorted"}
+            same_family = {"spa", "blocked_spa", "vec", "sorted"}
             agree += (picked == winner
                       or (picked in same_family and winner in same_family))
         emit(f"fig2_{kind}/engine_dispatch_agreement",

@@ -2,23 +2,45 @@
 RMAT sparsity patterns.
 
 The paper's tables are 48-core wall times; here the claim under test is the
-*relative ordering and scaling*: k-way one-touch algorithms (spa/sorted) beat
-2-way tree, which beats 2-way incremental, with the gap widening in k — the
-work columns of Table I.
+*relative ordering and scaling*: k-way one-touch algorithms (spa/sorted/vec)
+beat 2-way tree, which beats 2-way incremental, with the gap widening in k —
+the work columns of Table I. The ``vec`` rows additionally report per-chunk
+serial-store counts (the lane-parallel folds reduce them from O(chunk) to
+O(distinct runs); the one-hot MXU fold to zero) — the metric DESIGN.md §4
+says the serial scatter loses on.
+
+``--smoke`` runs a tiny-shape cross-regime consistency check (every
+algorithm, including the Pallas ``vec``/``blocked_spa``/``hash`` kernels,
+plus the engine's canonical regimes) and exits nonzero on any mismatch —
+the CI hook (scripts/ci.sh / .github/workflows/ci.yml).
 """
 from __future__ import annotations
 
+import argparse
 import functools
+import sys
 
 import jax
+import numpy as np
 
 from benchmarks.common import emit, gen_collection, time_fn
 from repro.core.engine import (explain_dispatch, spkadd_auto, spkadd_batched,
                                stack_collections)
+from repro.core.sparse import concat
 from repro.core.spkadd import spkadd
 
-ALGOS = ["incremental", "tree", "sorted", "spa"]
-KERNEL_ALGOS = ["blocked_spa", "hash"]
+ALGOS = ["incremental", "tree", "sorted", "spa", "vec"]
+KERNEL_ALGOS = ["blocked_spa", "hash"]  # slow faithful baselines, opt-in
+
+
+def _store_counts(mats):
+    """Serial-store counts for the concatenated stream under the vec launch
+    geometry (host-side oracle; see kernels/vec_accum.chunk_store_counts)."""
+    from repro.kernels import ops as kops
+
+    cat = concat(mats)
+    m, n = cat.shape
+    return kops.vec_store_counts(np.asarray(cat.keys), m=m, n=n)
 
 
 def run(kind: str, m=2048, n=32, ks=(4, 16, 64), ds=(4, 16, 64),
@@ -34,6 +56,11 @@ def run(kind: str, m=2048, n=32, ks=(4, 16, 64), ds=(4, 16, 64),
                 rows[(alg, k, d)] = us
                 emit(f"table_{kind}/{alg}/k={k}/d={d}", us,
                      f"nnz_in={k * d * n}")
+            # the serial-store story at this cell: O(chunk) -> O(distinct)
+            sc = _store_counts(mats)
+            emit(f"table_{kind}/stores/k={k}/d={d}", sc["sort_fold"],
+                 f"serial={sc['serial']} sort_fold={sc['sort_fold']} "
+                 f"onehot_fold={sc['onehot_fold']}")
             # the engine's pick for this cell, timed under the same harness
             us = time_fn(jax.jit(spkadd_auto), mats)
             _, picked = explain_dispatch(mats)
@@ -70,9 +97,59 @@ def run_batched(kind: str, b=8, k=8, m=2048, n=32, d=16):
          "loop_us / batched_us")
 
 
+def smoke(kind="er", k=6, m=64, n=8, d=4) -> int:
+    """Tiny-shape cross-regime consistency gate (the CI hook).
+
+    Every algorithm in the family — including the Pallas kernels and the
+    new ``vec`` regime — must agree with the dense oracle, and every
+    engine-canonical regime must be *bit-identical* to the sorted
+    reference. Returns a nonzero exit code on any mismatch.
+    """
+    from repro.core import engine as E
+
+    mats = gen_collection(kind, k, m, n, d, seed=7)
+    ref = spkadd(mats, algorithm="sorted")
+    ref_dense = np.asarray(ref.to_dense())
+    failures = 0
+    for alg in ALGOS + KERNEL_ALGOS:
+        out = spkadd(mats, algorithm=alg)
+        ok = np.allclose(np.asarray(out.to_dense()), ref_dense,
+                         rtol=1e-4, atol=1e-5)
+        emit(f"smoke/{alg}", 0.0 if ok else 1.0, "dense-agree" if ok else
+             "MISMATCH vs sorted reference")
+        failures += (not ok)
+    for regime in ("tree", "sorted", "spa", "vec", "blocked_spa"):
+        use = mats[:3] if regime == "tree" else mats
+        want = spkadd(use, algorithm="sorted")
+        got = E._CANONICAL[regime](use)
+        ok = (np.array_equal(np.asarray(want.keys), np.asarray(got.keys))
+              and np.array_equal(np.asarray(want.vals), np.asarray(got.vals))
+              and int(want.nnz) == int(got.nnz))
+        emit(f"smoke/canonical/{regime}", 0.0 if ok else 1.0,
+             "bit-identical" if ok else "BIT MISMATCH vs canonical contract")
+        failures += (not ok)
+    sc = _store_counts(mats)
+    emit("smoke/serial_stores", float(sc["serial"]), "serial fold")
+    emit("smoke/sort_fold_stores", float(sc["sort_fold"]),
+         "vec sort-fold (O(distinct runs))")
+    if failures:
+        emit("smoke/FAILED", float(failures), "cross-regime mismatches")
+    else:
+        emit("smoke/ok", 0.0, "all regimes agree")
+    return 1 if failures else 0
+
+
 def main():
-    run("er")
-    run("rmat")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shape cross-regime consistency gate (CI)")
+    ap.add_argument("--include-kernels", action="store_true",
+                    help="also time the Pallas kernel algorithms")
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(smoke())
+    run("er", include_kernels=args.include_kernels)
+    run("rmat", include_kernels=args.include_kernels)
     run_batched("er")
 
 

@@ -34,7 +34,7 @@ def run():
     A, B = sprand(M, K), sprand(K, N)
     ref = np.asarray(A) @ np.asarray(B)
     print(f"C = A({M}x{K}, 5% dense) @ B({K}x{N}) on a 2x2 SUMMA grid")
-    for alg in ["incremental", "tree", "sorted", "spa", "auto"]:
+    for alg in ["incremental", "tree", "sorted", "spa", "vec", "auto"]:
         fn = jax.jit(functools.partial(spgemm_summa, mesh=mesh, algorithm=alg))
         C = fn(A, B)
         jax.block_until_ready(C)

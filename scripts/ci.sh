@@ -12,3 +12,10 @@ if [[ "${CI_SKIP_INSTALL:-0}" != "1" ]]; then
 fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+# benchmark smoke: tiny-shape cross-regime consistency gate — every SpKAdd
+# algorithm (incl. the vec/blocked_spa/hash Pallas kernels) must agree, and
+# every engine-canonical regime must be bit-identical to the sorted
+# reference. Fails the build on any mismatch.
+PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.table34_algorithms --smoke

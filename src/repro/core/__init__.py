@@ -14,15 +14,18 @@ from repro.core.sparse import (PaddedCOO, from_coords, from_dense, make_empty,
                                with_capacity)
 from repro.core.engine import (RegimeSignals, regime_signals,
                                select_algorithm, explain_dispatch,
-                               spkadd_auto, spkadd_batched, spkadd_run,
+                               spkadd_auto, spkadd_batched,
+                               spkadd_batched_ragged, spkadd_run,
                                stack_collections, unstack_collection,
+                               bucket_collections,
                                scatter_accumulate, DEFAULT_COST_MODEL,
+                               default_cost_model, COST_MODEL_ENV,
                                calibrate_cost_model, dump_cost_model,
                                load_cost_model)
 from repro.core.spkadd import (ALGORITHMS, spkadd, spkadd_incremental,
                                spkadd_tree, spkadd_sorted, spkadd_spa,
                                spkadd_spa_dense, spkadd_blocked_spa,
-                               spkadd_hash, symbolic_nnz,
+                               spkadd_vec, spkadd_hash, symbolic_nnz,
                                symbolic_nnz_per_column, two_way_add)
 from repro.core.topk import (SparseUpdate, topk_global, topk_block, densify,
                              sparsify_with_feedback)
@@ -33,12 +36,15 @@ __all__ = [
     "PaddedCOO", "from_coords", "from_dense", "make_empty", "compress",
     "compress_plan", "concat", "sort_by_key", "with_capacity",
     "RegimeSignals", "regime_signals", "select_algorithm", "explain_dispatch",
-    "spkadd_auto", "spkadd_batched", "spkadd_run", "stack_collections",
-    "unstack_collection", "scatter_accumulate", "DEFAULT_COST_MODEL",
+    "spkadd_auto", "spkadd_batched", "spkadd_batched_ragged", "spkadd_run",
+    "stack_collections", "unstack_collection", "bucket_collections",
+    "scatter_accumulate", "DEFAULT_COST_MODEL", "default_cost_model",
+    "COST_MODEL_ENV",
     "calibrate_cost_model", "dump_cost_model", "load_cost_model",
     "ALGORITHMS", "spkadd",
     "spkadd_incremental", "spkadd_tree", "spkadd_sorted", "spkadd_spa",
-    "spkadd_spa_dense", "spkadd_blocked_spa", "spkadd_hash", "symbolic_nnz",
+    "spkadd_spa_dense", "spkadd_blocked_spa", "spkadd_vec",
+    "spkadd_hash", "symbolic_nnz",
     "symbolic_nnz_per_column", "two_way_add", "SparseUpdate", "topk_global",
     "topk_block", "densify", "sparsify_with_feedback", "sparse_allreduce",
     "compressed_gradient_mean", "SCHEDULES",

@@ -40,15 +40,27 @@ from repro.core.topk import SparseUpdate, densify
 # schedules (run inside shard_map; u is this worker's SparseUpdate)
 # ---------------------------------------------------------------------------
 
-def allgather_kway(u: SparseUpdate, axis: str) -> jax.Array:
+def allgather_kway(u: SparseUpdate, axis: str,
+                   accumulator: str = "scatter") -> jax.Array:
     """All-gather sparse streams, then one local k-way SpKAdd (paper's
     work-optimal k-way accumulation; k = axis size). The local add is the
-    engine's dense-SPA numeric phase — the same scatter the ``spa`` regime
-    uses, since the optimizer consumes the dense form anyway."""
+    engine's one-touch numeric phase, since the optimizer consumes the dense
+    form anyway: ``accumulator="scatter"`` is the XLA scatter the ``spa``
+    regime uses; ``accumulator="vec"`` routes the same stream through the
+    lane-parallel sliding fold (``kernels/vec_accum``) — bit-identical
+    output (both fold per-key contributions in stream order), but the
+    accumulation runs in the Pallas VMEM-tile discipline instead of a
+    serial scatter."""
     idx = jax.lax.all_gather(u.idx, axis)   # (P, s)
     val = jax.lax.all_gather(u.val, axis)   # (P, s)
     p = idx.shape[0]
-    dense = scatter_accumulate(idx.reshape(-1), val.reshape(-1), u.size)
+    flat_idx, flat_val = idx.reshape(-1), val.reshape(-1)
+    if accumulator == "vec":
+        from repro.kernels import ops as kops  # kernels are optional deps
+
+        dense = kops.vec_accumulate_flat(flat_idx, flat_val, m=u.size, n=1)
+    else:
+        dense = scatter_accumulate(flat_idx, flat_val, u.size)
     return dense / p
 
 
@@ -104,13 +116,20 @@ SCHEDULES: dict[str, Callable[[SparseUpdate, str], jax.Array]] = {
 
 
 def sparse_allreduce(u: SparseUpdate, axis: str,
-                     schedule: str = "gather_kway") -> jax.Array:
-    """Reduce-mean a SparseUpdate across ``axis`` (inside shard_map)."""
+                     schedule: str = "gather_kway",
+                     accumulator: str = "scatter") -> jax.Array:
+    """Reduce-mean a SparseUpdate across ``axis`` (inside shard_map).
+
+    ``accumulator`` selects the local k-way fold for the ``gather_kway``
+    schedule ("scatter" | "vec"); the 2-way schedules ignore it.
+    """
     try:
         fn = SCHEDULES[schedule]
     except KeyError:
         raise ValueError(f"unknown schedule {schedule!r}; "
                          f"choose from {sorted(SCHEDULES)}") from None
+    if schedule == "gather_kway":
+        return fn(u, axis, accumulator=accumulator)
     return fn(u, axis)
 
 

@@ -27,9 +27,10 @@ paper's symbolic/numeric split), and values accumulated in input-stream
 order. This works because the structural layout is computed once by
 :func:`repro.core.sparse.compress_plan` for every regime, and each regime
 only changes *how the per-key value sums are produced*: segment-sum over the
-sorted stream (merge regime), a dense scatter accumulator (SPA regime), or
-the VMEM-tiled Pallas accumulator (blocked regime) — all of which fold each
-key's contributions in the same stream order. Downstream callers can
+sorted stream (merge regime), a dense scatter accumulator (SPA regime),
+the VMEM-tiled Pallas accumulator (blocked regime), or the lane-parallel
+vectorized folds (vec regime, ``kernels/vec_accum``) — all of which fold
+each key's contributions in the same stream order. Downstream callers can
 therefore swap regimes freely without perturbing checkpoints or tests.
 
 :func:`spkadd_batched` vmaps the engine over a *stack* of B collections
@@ -39,15 +40,17 @@ instead of a Python loop.
 """
 from __future__ import annotations
 
+import functools
 import json
 import math
+import os
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparse import (PaddedCOO, compress_plan, concat,
-                               sentinel_key)
+from repro.core.sparse import (PaddedCOO, compress_plan, concat, next_pow2,
+                               sentinel_key, with_capacity)
 from repro.core import spkadd as _alg
 
 
@@ -108,7 +111,11 @@ def regime_signals(mats: Sequence[PaddedCOO],
 
 #: Region boundaries of the dispatch table. Values are the defaults measured
 #: on the interpret-mode CPU backend; ``benchmarks/fig2_regions.py`` can
-#: re-measure and dump a table for the current hardware.
+#: re-measure and dump a table for the current hardware. These in-code
+#: values are the fallback of last resort — :func:`default_cost_model`
+#: overlays the checked-in ``configs/cost_model_default.json`` and then the
+#: ``SPKADD_COST_MODEL`` env var, so calibrated tables drop in without code
+#: edits.
 DEFAULT_COST_MODEL: Dict[str, float] = {
     # tree merging only wins for tiny k (Fig. 2 bottom band). Also the k
     # range where the balanced tree degenerates to a left fold, which is what
@@ -119,16 +126,58 @@ DEFAULT_COST_MODEL: Dict[str, float] = {
     "spa_max_accum_elems": float(1 << 22),   # 16 MiB of f32 accumulator
     "spa_min_density": 1.0 / 64.0,
     "spa_min_compression": 1.25,
-    # sliding/blocked-SPA regime: bigger accumulators, still density-bound.
+    # vec regime: the lane-parallel sliding accumulator (kernels/vec_accum) —
+    # the production pick for accumulators past the dense-SPA budget. Tiles
+    # at or below vec_onehot_max_block_elems use the one-hot MXU fold
+    # (O(chunk·block_elems) FLOPs, zero serial stores); larger tiles use the
+    # bitonic sort-fold (O(distinct-runs) serial stores).
+    "vec_max_accum_elems": float(1 << 26),
+    "vec_min_density": 1.0 / 32.0,
+    "vec_onehot_max_block_elems": 4096.0,
+    # sliding/blocked-SPA regime: the serial-scatter fallback for the same
+    # accumulator range, reachable when a calibrated table disables vec
+    # (vec_max_accum_elems = 0) or prices it out on density.
     "blocked_spa_max_accum_elems": float(1 << 26),
     "blocked_spa_min_density": 1.0 / 16.0,
 }
+
+#: Env var naming a JSON cost-model file (as written by
+#: ``benchmarks/fig2_regions.py --dump-cost-model``) that overrides the
+#: checked-in defaults for every dispatch in the process.
+COST_MODEL_ENV = "SPKADD_COST_MODEL"
+
+#: The checked-in default table (same package as the model configs).
+COST_MODEL_CONFIG_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "configs", "cost_model_default.json")
+
+
+@functools.lru_cache(maxsize=None)
+def _cost_model_from(path: str) -> Dict[str, float]:
+    with open(path) as f:
+        return {str(k): float(v) for k, v in json.load(f).items()}
+
+
+def default_cost_model() -> Dict[str, float]:
+    """The process-wide dispatch table: in-code defaults, overlaid with the
+    checked-in ``configs/cost_model_default.json``, overlaid with the file
+    named by ``$SPKADD_COST_MODEL`` (if set). Files are parsed once per path
+    (cached); a missing env-var path raises rather than silently falling
+    back — a calibrated table that doesn't load should not go unnoticed.
+    """
+    cm = dict(DEFAULT_COST_MODEL)
+    if os.path.exists(COST_MODEL_CONFIG_PATH):
+        cm.update(_cost_model_from(COST_MODEL_CONFIG_PATH))
+    env_path = os.environ.get(COST_MODEL_ENV)
+    if env_path:
+        cm.update(_cost_model_from(env_path))
+    return cm
 
 
 def select_algorithm(signals: RegimeSignals,
                      cost_model: Optional[Dict[str, float]] = None) -> str:
     """Map regime signals to the Fig. 2 region winner."""
-    cm = dict(DEFAULT_COST_MODEL)
+    cm = default_cost_model()
     if cost_model:
         cm.update(cost_model)
     if signals.k <= cm["tree_max_k"]:
@@ -137,6 +186,9 @@ def select_algorithm(signals: RegimeSignals,
                       or signals.compression >= cm["spa_min_compression"])
     if signals.accum_elems <= cm["spa_max_accum_elems"] and spa_worthwhile:
         return "spa"
+    if (signals.accum_elems <= cm["vec_max_accum_elems"]
+            and signals.density >= cm["vec_min_density"]):
+        return "vec"
     if (signals.accum_elems <= cm["blocked_spa_max_accum_elems"]
             and signals.density >= cm["blocked_spa_min_density"]):
         return "blocked_spa"
@@ -162,6 +214,9 @@ def calibrate_cost_model(cells) -> Dict[str, float]:
     if spa_ds:
         cm["spa_min_density"] = min(spa_ds)
         cm["blocked_spa_min_density"] = min(spa_ds)
+    vec_ds = [d for (_, d), alg in items if alg == "vec"]
+    if vec_ds:
+        cm["vec_min_density"] = min(vec_ds)
     return cm
 
 
@@ -209,7 +264,8 @@ def _canonical_from_flat(cat: PaddedCOO, flat: jax.Array) -> PaddedCOO:
                      shape=cat.shape)
 
 
-def _run_spa(mats: Sequence[PaddedCOO]) -> PaddedCOO:
+def _run_spa(mats: Sequence[PaddedCOO],
+             cost_model: Optional[Dict[str, float]] = None) -> PaddedCOO:
     """SPA regime: one-touch dense scatter for the numeric phase, canonical
     structural layout for the output."""
     cat = concat(mats)
@@ -220,7 +276,9 @@ def _run_spa(mats: Sequence[PaddedCOO]) -> PaddedCOO:
 
 def _run_blocked_spa(mats: Sequence[PaddedCOO],
                      vmem_budget_bytes: int = 16 * 1024 * 1024,
-                     interpret: bool = True) -> PaddedCOO:
+                     interpret: bool = True,
+                     cost_model: Optional[Dict[str, float]] = None
+                     ) -> PaddedCOO:
     """Sliding-SPA regime: the Pallas VMEM-tiled accumulator produces the
     dense numeric phase; output layout is canonical."""
     from repro.kernels import ops as kops  # kernels are optional deps
@@ -233,7 +291,34 @@ def _run_blocked_spa(mats: Sequence[PaddedCOO],
     return _canonical_from_flat(cat, flat)
 
 
-def _run_tree(mats: Sequence[PaddedCOO]) -> PaddedCOO:
+def _run_vec(mats: Sequence[PaddedCOO],
+             vmem_budget_bytes: int = 16 * 1024 * 1024,
+             interpret: bool = True,
+             cost_model: Optional[Dict[str, float]] = None) -> PaddedCOO:
+    """Vec regime: the lane-parallel sliding accumulator
+    (``kernels/vec_accum``) produces the dense numeric phase. The wrapper
+    pre-sorts the stream into the canonical plan order, so per-key sums are
+    bit-identical to every other regime (DESIGN.md §3.3/§4); the one-hot vs
+    sort-fold choice follows the cost model's tile-size boundary
+    (``cost_model`` overrides layer on top of the process-wide table, as in
+    :func:`select_algorithm`)."""
+    from repro.kernels import ops as kops  # kernels are optional deps
+
+    cm = default_cost_model()
+    if cost_model:
+        cm.update(cost_model)
+    cat = concat(mats)
+    m, n = cat.shape
+    flat = kops.vec_accumulate_flat(
+        cat.keys, cat.vals, m=m, n=n,
+        vmem_budget_bytes=vmem_budget_bytes,
+        onehot_max_block_elems=int(cm["vec_onehot_max_block_elems"]),
+        interpret=interpret)
+    return _canonical_from_flat(cat, flat)
+
+
+def _run_tree(mats: Sequence[PaddedCOO],
+              cost_model: Optional[Dict[str, float]] = None) -> PaddedCOO:
     """Tiny-k regime, canonical-contract-preserving for *any* tree_max_k:
 
     - k=1: ``spkadd_tree`` would return the input uncompressed (no final
@@ -253,11 +338,15 @@ def _run_tree(mats: Sequence[PaddedCOO]) -> PaddedCOO:
 
 
 #: Engine-canonical paths: every entry returns the same PaddedCOO bitwise
-#: (the per-key value folds all happen in input-stream order).
+#: (the per-key value folds all happen in input-stream order). Entries share
+#: the signature ``(mats, cost_model=None)`` — the cost model carries
+#: regime-internal knobs (today: the vec one-hot boundary), so per-call
+#: overrides reach every regime uniformly.
 _CANONICAL = {
     "tree": _run_tree,
-    "sorted": lambda mats: _alg.spkadd_sorted(mats),
+    "sorted": lambda mats, cost_model=None: _alg.spkadd_sorted(mats),
     "spa": _run_spa,
+    "vec": _run_vec,
     "blocked_spa": _run_blocked_spa,
 }
 
@@ -273,7 +362,8 @@ def spkadd_auto(mats: Sequence[PaddedCOO], *,
     ``cost_model=`` a calibrated table (see :func:`load_cost_model`).
     """
     sig = signals if signals is not None else regime_signals(mats)
-    return _CANONICAL[select_algorithm(sig, cost_model)](mats)
+    selected = select_algorithm(sig, cost_model)
+    return _CANONICAL[selected](mats, cost_model=cost_model)
 
 
 def explain_dispatch(mats: Sequence[PaddedCOO], *,
@@ -352,11 +442,58 @@ def spkadd_batched(stacked_mats: Sequence[PaddedCOO], *,
                             compression=estimate_compression(total, mn),
                             accum_elems=mn)
         algorithm = select_algorithm(sig, cost_model)
-    if algorithm == "blocked_spa":
+    if algorithm in ("blocked_spa", "vec"):
         algorithm = "spa"  # pallas grid doesn't vmap; same canonical result
 
     def one(mats):
-        return _CANONICAL[algorithm](mats) if algorithm in _CANONICAL \
+        return _CANONICAL[algorithm](mats, cost_model=cost_model) \
+            if algorithm in _CANONICAL \
             else _alg.spkadd(mats, algorithm=algorithm)
 
     return jax.vmap(one)(list(stacked_mats))
+
+
+# ---------------------------------------------------------------------------
+# ragged batched execution (capacity bucketing)
+# ---------------------------------------------------------------------------
+
+def bucket_collections(collections: Sequence[Sequence[PaddedCOO]]):
+    """Group collections by (shape, k, pow2-rounded per-matrix capacities).
+
+    Returns ``{bucket_key: [(orig_index, padded_collection), ...]}`` where
+    every matrix in a padded collection has its capacity rounded up to the
+    next power of two — the rounding is what folds near-miss capacities
+    into a shared bucket so one vmapped program covers them.
+    """
+    buckets: Dict[tuple, List[tuple]] = {}
+    for i, coll in enumerate(collections):
+        caps = tuple(next_pow2(a.cap) for a in coll)
+        padded = [with_capacity(a, c) for a, c in zip(coll, caps)]
+        key = (coll[0].shape, caps)
+        buckets.setdefault(key, []).append((i, padded))
+    return buckets
+
+
+def spkadd_batched_ragged(collections: Sequence[Sequence[PaddedCOO]], *,
+                          algorithm: str = "auto",
+                          cost_model: Optional[Dict[str, float]] = None
+                          ) -> List[PaddedCOO]:
+    """:func:`spkadd_batched` for *ragged* stacks: per-collection capacities
+    (and k) no longer have to match. Collections are bucketed by
+    (shape, k, pow2-rounded capacities) — padding a capacity to the next
+    power of two is free under the PaddedCOO sentinel invariant and folds
+    the long tail of near-miss capacities into a handful of buckets — and
+    each bucket runs as one vmapped engine program. Results come back in
+    input order; a result's capacity is its bucket's rounded total (a
+    superset layout of the unrounded canonical output: same leading
+    distinct keys, extra sentinel slots).
+    """
+    results: List[Optional[PaddedCOO]] = [None] * len(collections)
+    for _, members in bucket_collections(collections).items():
+        idxs = [i for i, _ in members]
+        stacked = stack_collections([padded for _, padded in members])
+        out = spkadd_batched(stacked, algorithm=algorithm,
+                             cost_model=cost_model)
+        for b, i in enumerate(idxs):
+            results[i] = unstack_collection([out], b)[0]
+    return results

@@ -20,6 +20,16 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (>= 1). Shared by capacity bucketing
+    (engine) and chunk sizing (kernel wrappers) so their roundings can
+    never drift apart."""
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
 def sentinel_key(shape: Tuple[int, int]) -> int:
     """Key strictly greater than any valid linearized (row, col)."""
     m, n = shape

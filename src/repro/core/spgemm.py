@@ -40,8 +40,10 @@ def spgemm_summa(a: jax.Array, b: jax.Array, mesh, *, algorithm: str = "auto",
 
     The reduction goes through the regime engine: the default ``"auto"``
     lets :func:`repro.core.engine.spkadd_auto` pick the winner for the
-    (k = num_stages, partial density) regime; explicit names select a fixed
-    family member for A/B comparisons.
+    (k = num_stages, partial density) regime — including the lane-parallel
+    ``vec`` accumulator (kernels/vec_accum) once the partials outgrow the
+    dense-SPA budget; explicit names (e.g. ``"vec"``, ``"blocked_spa"``)
+    select a fixed family member for A/B comparisons.
 
     Returns the dense C (sharded like A) — callers needing sparse C can
     re-sparsify; keeping the reduction sparse is the point being measured.
@@ -69,9 +71,11 @@ def spgemm_summa(a: jax.Array, b: jax.Array, mesh, *, algorithm: str = "auto",
         c_sparse = _spkadd_run(partials, algorithm=algorithm)
         return c_sparse.to_dense()
 
+    # check_vma=False: the vec/blocked_spa regimes run a pallas_call inside
+    # the shard, and pallas_call has no replication rule
     f = shard_map(worker, mesh=mesh,
                   in_specs=(P("data", "model"), P("data", "model")),
-                  out_specs=P("data", "model"))
+                  out_specs=P("data", "model"), check_vma=False)
     return f(a, b)
 
 

@@ -12,6 +12,7 @@ k-way heap             ``spkadd_sorted``       (sort + segment-sum)   O(k·nnz·
 k-way SPA              ``spkadd_spa``          (dense scatter-add)    O(k·nnz + m·n)
 k-way hash             ``kernels/hash_accum``  (faithful Pallas)      O(k·nnz) expected
 k-way sliding hash     ``spkadd_blocked_spa``  (VMEM-tiled Pallas)    O(k·nnz + m·n/parts per part)
+k-way sliding, vec     ``spkadd_vec``          (lane-parallel Pallas) same, O(distinct) serial stores
 =====================  =============================================  =========
 
 The heap's streaming k-way merge is replaced by one vectorized sort — on TPU a
@@ -112,6 +113,20 @@ def spkadd_sorted(mats: Sequence[PaddedCOO]) -> PaddedCOO:
     return compress(concat(mats))
 
 
+def _resparsify_flat(flat: jax.Array, shape, out_cap: int) -> PaddedCOO:
+    """Dense (m*n,) key-ordered accumulator -> key-sorted PaddedCOO keeping
+    the ``out_cap`` heaviest entries (exact when the true nnz fits) — the
+    shared back half of every dense-accumulator algorithm."""
+    absv = jnp.abs(flat)
+    _, idx = jax.lax.top_k(absv, out_cap)
+    vals = flat[idx]
+    valid = vals != 0.0
+    keys = jnp.where(valid, idx.astype(jnp.int32), sentinel_key(shape))
+    order = jnp.argsort(keys)
+    return PaddedCOO(keys=keys[order], vals=jnp.where(valid, vals, 0.0)[order],
+                     nnz=valid.sum().astype(jnp.int32), shape=shape)
+
+
 def spkadd_spa(mats: Sequence[PaddedCOO], out_cap: int | None = None) -> PaddedCOO:
     """k-way SPA (paper Alg. 4): dense m×n accumulator + scatter-add, then one
     re-sparsification. Work-optimal O(sum nnz) scatter, O(m·n) accumulator —
@@ -125,15 +140,7 @@ def spkadd_spa(mats: Sequence[PaddedCOO], out_cap: int | None = None) -> PaddedC
         flat = flat.at[k].add(v)
     if out_cap is None:
         out_cap = sum(a.cap for a in mats)
-    out_cap = min(out_cap, m * n)
-    absv = jnp.abs(flat)
-    _, idx = jax.lax.top_k(absv, out_cap)
-    vals = flat[idx]
-    valid = vals != 0.0
-    keys = jnp.where(valid, idx.astype(jnp.int32), sentinel_key(shape))
-    order = jnp.argsort(keys)
-    return PaddedCOO(keys=keys[order], vals=jnp.where(valid, vals, 0.0)[order],
-                     nnz=valid.sum().astype(jnp.int32), shape=shape)
+    return _resparsify_flat(flat, shape, min(out_cap, m * n))
 
 
 def spkadd_spa_dense(mats: Sequence[PaddedCOO]) -> jax.Array:
@@ -164,20 +171,34 @@ def spkadd_blocked_spa(mats: Sequence[PaddedCOO], block_rows: int | None = None,
     shape = mats[0].shape
     m, n = shape
     cat = concat(mats)
-    dense = kops.spa_accumulate(cat.keys, cat.vals, m=m, n=n,
-                                block_rows=block_rows,
-                                vmem_budget_bytes=vmem_budget_bytes,
-                                interpret=interpret)
-    out_cap = min(cat.cap, m * n)
-    flat = dense.T.reshape(-1)
-    absv = jnp.abs(flat)
-    _, idx = jax.lax.top_k(absv, out_cap)
-    vals = flat[idx]
-    valid = vals != 0.0
-    keys = jnp.where(valid, idx.astype(jnp.int32), sentinel_key(shape))
-    order = jnp.argsort(keys)
-    return PaddedCOO(keys=keys[order], vals=jnp.where(valid, vals, 0.0)[order],
-                     nnz=valid.sum().astype(jnp.int32), shape=shape)
+    flat = kops.spa_accumulate_flat(cat.keys, cat.vals, m=m, n=n,
+                                    block_rows=block_rows,
+                                    vmem_budget_bytes=vmem_budget_bytes,
+                                    interpret=interpret)
+    return _resparsify_flat(flat, shape, min(cat.cap, m * n))
+
+
+def spkadd_vec(mats: Sequence[PaddedCOO], block_rows: int | None = None,
+               vmem_budget_bytes: int = 16 * 1024 * 1024,
+               fold: str = "auto", interpret: bool = True) -> PaddedCOO:
+    """Lane-parallel sliding SpKAdd — the vectorized production variant of
+    :func:`spkadd_blocked_spa`.
+
+    Same sliding VMEM grid, but the in-tile scatter is replaced by the
+    bitonic sort-fold or the one-hot MXU fold from
+    :mod:`repro.kernels.vec_accum` (``fold="auto"`` picks by tile size):
+    O(distinct-runs) or zero serial stores per chunk instead of O(chunk).
+    """
+    from repro.kernels import ops as kops
+
+    shape = mats[0].shape
+    m, n = shape
+    cat = concat(mats)
+    flat = kops.vec_accumulate_flat(cat.keys, cat.vals, m=m, n=n,
+                                    block_rows=block_rows,
+                                    vmem_budget_bytes=vmem_budget_bytes,
+                                    fold=fold, interpret=interpret)
+    return _resparsify_flat(flat, shape, min(cat.cap, m * n))
 
 
 def spkadd_hash(mats: Sequence[PaddedCOO], interpret: bool = True) -> PaddedCOO:
@@ -203,6 +224,7 @@ ALGORITHMS = {
     "tree": spkadd_tree,
     "sorted": spkadd_sorted,
     "spa": spkadd_spa,
+    "vec": spkadd_vec,
     "blocked_spa": spkadd_blocked_spa,
     "hash": spkadd_hash,
 }

@@ -5,11 +5,20 @@ or matrices arrive in batches), we can still arrange input matrices in
 multiple batches and then use SpKAdd for each batch."
 
 ``StreamingAccumulator`` implements exactly that: matrices arrive one at a
-time; every ``batch_k`` arrivals are combined with a k-way SpKAdd into the
-running sum, whose capacity is budgeted (heavy-entry truncation when the
-running nnz would exceed it — the same budget discipline as top-k gradient
-sparsification). The batch buffer bounds resident memory at
-O(batch_k · nnz_in + cap_budget) independent of the stream length.
+time; every ``batch_k`` arrivals form a *window* that is combined with a
+k-way SpKAdd into the running sum, whose capacity is budgeted (heavy-entry
+truncation when the running nnz would exceed it — the same budget discipline
+as top-k gradient sparsification). The batch buffer bounds resident memory
+at O(batch_k · window_batch · nnz_in + cap_budget) independent of the
+stream length.
+
+Additions go through the regime engine (``spkadd_run``; default
+``algorithm="auto"`` dispatches per the paper's Fig. 2 regions), and with
+``window_batch > 1`` the accumulator buffers several windows and reduces
+them with **one** vmapped engine program (``spkadd_batched_ragged`` —
+capacities may differ across windows) before a single k-way merge into the
+running sum, instead of the old per-window Python loop of separate XLA
+programs.
 
 Use cases mirrored from the paper: streaming graph-snapshot accumulation,
 mini-batched sparse gradient aggregation.
@@ -21,8 +30,8 @@ from typing import List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import spkadd_batched_ragged, spkadd_run
 from repro.core.sparse import PaddedCOO, make_empty, sentinel_key
-from repro.core.spkadd import spkadd
 
 
 def _truncate_by_magnitude(a: PaddedCOO, cap: int) -> PaddedCOO:
@@ -43,13 +52,22 @@ def _truncate_by_magnitude(a: PaddedCOO, cap: int) -> PaddedCOO:
 
 
 class StreamingAccumulator:
+    """Windowed streaming sum with a budgeted running state.
+
+    ``batch_k`` matrices per window; ``window_batch`` windows are buffered
+    and reduced together through the batched engine (one XLA program for
+    all buffered windows) — set it > 1 when arrivals are bursty and you
+    want the reduction amortized across windows.
+    """
+
     def __init__(self, shape: Tuple[int, int], *, batch_k: int = 8,
-                 cap_budget: int = 1 << 16, algorithm: str = "sorted",
-                 dtype=jnp.float32):
+                 cap_budget: int = 1 << 16, algorithm: str = "auto",
+                 window_batch: int = 1, dtype=jnp.float32):
         self.shape = shape
         self.batch_k = batch_k
         self.cap_budget = min(cap_budget, shape[0] * shape[1])
         self.algorithm = algorithm
+        self.window_batch = max(1, window_batch)
         self._buffer: List[PaddedCOO] = []
         self._sum: PaddedCOO = make_empty(shape, self.cap_budget, dtype)
         self.n_seen = 0
@@ -59,14 +77,25 @@ class StreamingAccumulator:
         assert a.shape == self.shape, "stream matrices must share the shape"
         self._buffer.append(a)
         self.n_seen += 1
-        if len(self._buffer) >= self.batch_k:
+        if len(self._buffer) >= self.batch_k * self.window_batch:
             self.flush()
 
     def flush(self) -> None:
         if not self._buffer:
             return
-        combined = spkadd([self._sum] + self._buffer,
-                          algorithm=self.algorithm)
+        if len(self._buffer) <= self.batch_k:
+            # single window: one k-way add folds buffer and running sum
+            combined = spkadd_run([self._sum] + self._buffer,
+                                  algorithm=self.algorithm)
+        else:
+            # several buffered windows: reduce them all in one vmapped
+            # engine program (ragged: window capacities may differ), then
+            # one k-way merge into the running sum
+            windows = [self._buffer[i:i + self.batch_k]
+                       for i in range(0, len(self._buffer), self.batch_k)]
+            sums = spkadd_batched_ragged(windows, algorithm=self.algorithm)
+            combined = spkadd_run([self._sum] + sums,
+                                  algorithm=self.algorithm)
         # re-budget: keep the heaviest-by-|value| cap_budget entries (exact
         # when the true nnz fits; a documented approximation when it does not)
         self._sum = _truncate_by_magnitude(combined, self.cap_budget)

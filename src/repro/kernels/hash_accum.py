@@ -8,8 +8,9 @@ decides termination — the canonical Pallas pattern for data-dependent probing.
 This kernel exists to reproduce the paper's algorithm *as published*: it is
 bit-faithful, validates in interpret mode, and demonstrates in DESIGN.md why
 scalar probing is the non-production path on TPU (each probe serializes a VMEM
-round-trip; no vector lanes are used). The production accumulator is
-spa_accum.py.
+round-trip; no vector lanes are used). The production accumulator is the
+lane-parallel sliding fold in vec_accum.py (bitonic sort-fold / one-hot MXU
+fold), running on the spa_accum.py sliding grid — see DESIGN.md §4.
 
 Table sizing follows the paper: a power of two strictly greater than the
 worst-case distinct-key count, kept at load factor <= 0.5 so expected probes

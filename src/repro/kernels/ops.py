@@ -11,8 +11,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.sparse import next_pow2 as _next_pow2
 from repro.kernels import hash_accum as _hash
 from repro.kernels import spa_accum as _spa
+from repro.kernels import vec_accum as _vec
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -72,6 +74,104 @@ def spa_accumulate_flat(keys: jax.Array, vals: jax.Array, *, m: int, n: int,
                            vmem_budget_bytes=vmem_budget_bytes, chunk=chunk,
                            interpret=interpret)
     return dense.T.reshape(-1)
+
+
+#: tiles at or below this many elements use the one-hot MXU fold by default
+#: (mirrors ``engine.DEFAULT_COST_MODEL["vec_onehot_max_block_elems"]``).
+DEFAULT_ONEHOT_MAX_BLOCK_ELEMS = 4096
+
+
+def vec_launch_geometry(cap: int, *, m: int, n: int,
+                        block_rows: int | None = None,
+                        vmem_budget_bytes: int = 16 * 1024 * 1024,
+                        chunk: int | None = None) -> tuple[int, int]:
+    """(block_rows, chunk) the vec launch uses for a ``cap``-long stream —
+    the single source of truth shared by :func:`vec_accumulate` and the
+    store-count oracle, so the oracle can never drift from the kernel."""
+    if block_rows is None:
+        block_rows = choose_block_rows(m, n, vmem_budget_bytes)
+    block_rows = min(block_rows, _round_up(m, 8))
+    if chunk is None:
+        chunk = min(_spa.DEFAULT_CHUNK, _next_pow2(max(cap, 8)))
+    return block_rows, chunk
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n", "fold", "block_rows",
+                                             "vmem_budget_bytes", "chunk",
+                                             "onehot_max_block_elems",
+                                             "interpret"))
+def vec_accumulate(keys: jax.Array, vals: jax.Array, *, m: int, n: int,
+                   fold: str = "auto", block_rows: int | None = None,
+                   vmem_budget_bytes: int = 16 * 1024 * 1024,
+                   chunk: int | None = None,
+                   onehot_max_block_elems: int = DEFAULT_ONEHOT_MAX_BLOCK_ELEMS,
+                   interpret: bool = True) -> jax.Array:
+    """Lane-parallel sliding accumulate -> dense (m, n) f32.
+
+    Same sliding grid as :func:`spa_accumulate`, but the in-tile fold is one
+    of the vectorized paths from :mod:`repro.kernels.vec_accum`:
+    ``fold="sort"`` (bitonic sort-fold, O(distinct-runs) serial stores) or
+    ``fold="onehot"`` (one-hot MXU fold, zero serial stores).
+    ``fold="auto"`` picks ``onehot`` when the tile has at most
+    ``onehot_max_block_elems`` elements (the matmul's O(chunk·block_elems)
+    FLOPs stay cheap) and ``sort`` otherwise.
+
+    The stream is **pre-sorted by key (stable)** before launch. That makes
+    the fold bit-identical to the canonical ``compress_plan`` contract
+    (stream-order per-key sums) regardless of the input order — the stable
+    sort is exactly the plan's ``argsort``, so duplicates keep their stream
+    order and runs never fragment across in-chunk masking.
+    """
+    sent = jnp.int32(m * n)
+    valid = keys < m * n
+    keys_c = jnp.where(valid, keys, sent).astype(jnp.int32)
+    vals_c = jnp.where(valid, vals.astype(jnp.float32), 0.0)
+    order = jnp.argsort(keys_c, stable=True)
+    keys_s = keys_c[order]
+    vals_s = vals_c[order]
+
+    cap = keys.shape[0]
+    block_rows, chunk = vec_launch_geometry(
+        cap, m=m, n=n, block_rows=block_rows,
+        vmem_budget_bytes=vmem_budget_bytes, chunk=chunk)
+    if fold == "auto":
+        # the one-hot fold materializes a (chunk, block_elems) f32 one-hot
+        # plus an int32 iota of the same shape — those intermediates must
+        # fit the VMEM budget alongside the tile, or the "small tile" regime
+        # is a lie on real hardware
+        onehot_bytes = chunk * block_rows * n * 8
+        fold = "onehot" if (block_rows * n <= onehot_max_block_elems
+                            and onehot_bytes <= vmem_budget_bytes) \
+            else "sort"
+
+    cap_pad = _round_up(max(cap, 1), chunk)
+    keys_p = jnp.full((cap_pad,), sent, jnp.int32).at[:cap].set(keys_s)
+    vals_p = jnp.zeros((cap_pad,), jnp.float32).at[:cap].set(vals_s)
+    return _spa.spa_accumulate_raw(keys_p, vals_p, m=m, n=n,
+                                   block_rows=block_rows, chunk=chunk,
+                                   fold=fold, interpret=interpret)
+
+
+def vec_accumulate_flat(keys: jax.Array, vals: jax.Array, *, m: int, n: int,
+                        **kw) -> jax.Array:
+    """:func:`vec_accumulate` -> flat (m*n,) f32 in key order (col-major),
+    so ``flat[key]`` is the accumulated value of ``key`` — the form the
+    regime engine's canonical gather consumes."""
+    dense = vec_accumulate(keys, vals, m=m, n=n, **kw)
+    return dense.T.reshape(-1)
+
+
+def vec_store_counts(keys, *, m: int, n: int,
+                     block_rows: int | None = None,
+                     vmem_budget_bytes: int = 16 * 1024 * 1024,
+                     chunk: int | None = None) -> dict:
+    """Host-side serial-store counts (serial vs sort-fold vs one-hot) for
+    the launch geometry :func:`vec_accumulate` would use on this stream."""
+    block_rows, chunk = vec_launch_geometry(
+        len(keys), m=m, n=n, block_rows=block_rows,
+        vmem_budget_bytes=vmem_budget_bytes, chunk=chunk)
+    return _vec.chunk_store_counts(keys, m=m, n=n, block_rows=block_rows,
+                                   chunk=chunk)
 
 
 @functools.partial(jax.jit, static_argnames=("sent", "table_size", "interpret"))

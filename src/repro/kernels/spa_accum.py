@@ -13,11 +13,20 @@ exactly the paper's cache discipline with M := VMEM.
 Keys are CSC-linearized (``key = col*m + row``); the sentinel ``m*n`` (or
 anything >= m*n) marks padding and is dropped in-kernel.
 
-The in-tile scatter is a ``fori_loop`` of dynamic stores. On real TPU this
-serializes through the store unit; the production note in DESIGN.md explains
-why this is still the right structure (the alternative — one-hot matmul — is
-MXU-friendly but needs O(chunk·block·n) FLOPs). Interpret mode validates the
-semantics bit-exactly against kernels/ref.py.
+The **in-tile fold is pluggable** (``fold=`` launch parameter):
+
+- ``"serial"`` — the original ``fori_loop`` of one dynamic store per input
+  element. O(chunk) dependent stores; kept as the fidelity baseline and for
+  streams that are not pre-sorted.
+- ``"sort"`` / ``"onehot"`` — the lane-parallel folds from
+  :mod:`repro.kernels.vec_accum` (bitonic sort + stream-order run fold;
+  stores either compacted to O(distinct runs) or expressed as a one-hot MXU
+  matmul). These are the production paths — see DESIGN.md §4 for the
+  FLOP/byte trade-off and ``kernels/ops.vec_accumulate`` for the public
+  wrapper (which pre-sorts the stream so the fold is bit-identical to the
+  canonical ``compress_plan`` contract).
+
+Interpret mode validates all three folds bit-exactly against kernels/ref.py.
 """
 from __future__ import annotations
 
@@ -27,12 +36,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import vec_accum as _vec
+
 
 DEFAULT_CHUNK = 1024
 
 
 def _spa_kernel(keys_ref, vals_ref, out_ref, *, m: int, n: int,
-                block_rows: int, chunk: int):
+                block_rows: int, chunk: int, fold: str):
     """``m`` is the TRUE row count (keys are col*m+row); the grid may cover a
     padded row space (parts*block_rows >= m) — trailing rows just stay 0."""
     part = pl.program_id(0)
@@ -48,37 +59,52 @@ def _spa_kernel(keys_ref, vals_ref, out_ref, *, m: int, n: int,
     rows = keys % m
     cols = keys // m
     valid = (keys < m * n) & (rows >= row_lo) & (rows < row_lo + block_rows)
-    rows_local = jnp.where(valid, rows - row_lo, 0)
-    cols_local = jnp.where(valid, cols, 0)
-    vals_masked = jnp.where(valid, vals, 0.0)
 
-    def body(e, _):
-        r = rows_local[e]
-        cc = cols_local[e]
-        cur = pl.load(out_ref, (r, cc))
-        pl.store(out_ref, (r, cc), cur + vals_masked[e])
-        return 0
+    if fold == "serial":
+        rows_local = jnp.where(valid, rows - row_lo, 0)
+        cols_local = jnp.where(valid, cols, 0)
+        vals_masked = jnp.where(valid, vals, 0.0)
 
-    jax.lax.fori_loop(0, chunk, body, 0)
+        def body(e, _):
+            r = rows_local[e]
+            cc = cols_local[e]
+            cur = pl.load(out_ref, (r, cc))
+            pl.store(out_ref, (r, cc), cur + vals_masked[e])
+            return 0
+
+        jax.lax.fori_loop(0, chunk, body, 0)
+    else:
+        # local row-major slot into the (block_rows, n) tile
+        slot = jnp.where(valid, (rows - row_lo) * n + cols, block_rows * n)
+        tile_fold = _vec.sort_fold if fold == "sort" else _vec.onehot_fold
+        tile_fold(slot, vals, valid, out_ref, n_cols=n)
 
 
 def spa_accumulate_raw(keys: jax.Array, vals: jax.Array, *, m: int, n: int,
                        block_rows: int, chunk: int = DEFAULT_CHUNK,
+                       fold: str = "serial",
                        interpret: bool = True) -> jax.Array:
     """Scatter-accumulate (key, val) streams into a dense (m, n) f32 array.
 
     ``keys``/``vals`` must already be padded to a multiple of ``chunk`` with
     sentinel keys (>= m*n) and zero values. ``m`` must be a multiple of
-    ``block_rows`` (pad rows upstream).
+    ``block_rows`` (pad rows upstream). ``fold`` selects the in-tile
+    accumulation strategy (see module docstring); the vectorized folds
+    require a power-of-two ``chunk`` and, for bit-identity with the
+    canonical contract, a stream pre-sorted by key (stable).
     """
     assert keys.shape == vals.shape and keys.ndim == 1
     assert keys.shape[0] % chunk == 0, "pad inputs to a chunk multiple"
+    assert fold in _vec.FOLDS, f"unknown fold {fold!r}; one of {_vec.FOLDS}"
+    if fold != "serial":
+        assert chunk & (chunk - 1) == 0, \
+            "vectorized folds need a power-of-two chunk (bitonic network)"
     parts = (m + block_rows - 1) // block_rows
     m_pad = parts * block_rows
     num_chunks = keys.shape[0] // chunk
 
     kernel = functools.partial(_spa_kernel, m=m, n=n, block_rows=block_rows,
-                               chunk=chunk)
+                               chunk=chunk, fold=fold)
     out = pl.pallas_call(
         kernel,
         grid=(parts, num_chunks),

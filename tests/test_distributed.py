@@ -36,6 +36,36 @@ print('schedules ok')
 """)
 
 
+def test_gather_kway_vec_accumulator_bit_identical(multidevice):
+    """The gather_kway schedule routed through the lane-parallel vec
+    accumulator (kernels/vec_accum) must return the *same bits* as the XLA
+    scatter — both fold per-key contributions in stream order."""
+    multidevice(r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.core.topk import topk_global
+from repro.core import allreduce as AR
+
+mesh = jax.make_mesh((8,), ('data',))
+rng = np.random.default_rng(5)
+size, kk = 400, 40
+G = rng.standard_normal((8, size)).astype(np.float32)
+
+def worker(g):
+    u = topk_global(g.reshape(-1), kk)
+    return (AR.sparse_allreduce(u, 'data', 'gather_kway'),
+            AR.sparse_allreduce(u, 'data', 'gather_kway', accumulator='vec'))
+
+# check_vma=False: no replication rule exists for pallas_call
+f = shard_map(worker, mesh=mesh, in_specs=(P('data'),), out_specs=P('data'),
+              check_vma=False)
+scatter, vec = f(jnp.asarray(G))
+np.testing.assert_array_equal(np.asarray(scatter), np.asarray(vec))
+print('vec accumulator bitwise ok')
+""")
+
+
 def test_compressed_training_matches_dense_at_full_k(multidevice):
     """k_fraction=1.0 (lossless sparse allreduce) must track dense DP
     training step-for-step."""

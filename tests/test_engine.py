@@ -56,7 +56,12 @@ def test_select_algorithm_regions():
     big_accum = E.RegimeSignals(
         k=16, density=0.5, compression=2.0,
         accum_elems=int(cm["spa_max_accum_elems"]) * 2)
-    assert E.select_algorithm(big_accum) == "blocked_spa"
+    # past the dense-SPA budget the lane-parallel vec accumulator is the
+    # production pick; the serial blocked_spa survives as the fallback when
+    # a calibrated table disables vec
+    assert E.select_algorithm(big_accum) == "vec"
+    assert E.select_algorithm(
+        big_accum, {"vec_max_accum_elems": 0.0}) == "blocked_spa"
     hyper_sparse = E.RegimeSignals(
         k=16, density=1e-6, compression=1.0,
         accum_elems=int(cm["blocked_spa_max_accum_elems"]) * 2)
@@ -87,6 +92,41 @@ def test_calibrate_cost_model_accepts_duplicate_cells():
     cm = E.calibrate_cost_model(cells)
     assert cm["tree_max_k"] == 8
     assert cm["spa_min_density"] == pytest.approx(0.02)
+
+
+def test_calibrate_cost_model_learns_vec_boundary():
+    cells = [((16, 0.04), "vec"), ((32, 0.4), "vec"), ((8, 0.001), "sorted")]
+    cm = E.calibrate_cost_model(cells)
+    assert cm["vec_min_density"] == pytest.approx(0.04)
+
+
+def test_default_cost_model_loads_checked_in_config():
+    """The checked-in configs/cost_model_default.json is the documented
+    drop-in point for calibrated tables; it must load and cover every
+    dispatch key the in-code defaults define."""
+    import os
+    assert os.path.exists(E.COST_MODEL_CONFIG_PATH), E.COST_MODEL_CONFIG_PATH
+    cm = E.default_cost_model()
+    assert set(E.DEFAULT_COST_MODEL) <= set(cm)
+
+
+def test_cost_model_env_override(tmp_path, monkeypatch):
+    """$SPKADD_COST_MODEL points at a calibrated table and every dispatch
+    in the process picks it up — no code edits."""
+    path = str(tmp_path / "calibrated.json")
+    E.dump_cost_model({"tree_max_k": 9}, path)
+    monkeypatch.setenv(E.COST_MODEL_ENV, path)
+    sig = E.RegimeSignals(k=9, density=0.5, compression=2.0, accum_elems=256)
+    assert E.select_algorithm(sig) == "tree"
+    monkeypatch.delenv(E.COST_MODEL_ENV)
+    assert E.select_algorithm(sig) != "tree"
+
+
+def test_cost_model_env_missing_file_raises(tmp_path, monkeypatch):
+    monkeypatch.setenv(E.COST_MODEL_ENV, str(tmp_path / "nope.json"))
+    sig = E.RegimeSignals(k=2, density=0.5, compression=2.0, accum_elems=256)
+    with pytest.raises(FileNotFoundError):
+        E.select_algorithm(sig)
 
 
 def test_calibrated_tree_max_k_above_3_keeps_bit_identity():
@@ -135,7 +175,8 @@ def test_auto_sweep_exercises_multiple_regimes():
     assert len(seen) >= 2, seen
 
 
-@pytest.mark.parametrize("forced", ["tree", "sorted", "spa", "blocked_spa"])
+@pytest.mark.parametrize("forced", ["tree", "sorted", "spa", "vec",
+                                    "blocked_spa"])
 def test_forced_regime_bit_identical(forced):
     """Every canonical path — not just the one dispatch picks — must emit
     the sorted reference bitwise. Tree is exercised at k=3, the largest k
@@ -154,10 +195,15 @@ def test_forced_regime_via_cost_model():
     force_spa = {"tree_max_k": 0, "spa_min_density": 0.0,
                  "spa_min_compression": 1.0}
     assert_bit_identical(ref, E.spkadd_auto(mats, cost_model=force_spa))
+    force_vec = {"tree_max_k": 0, "spa_max_accum_elems": 1.0,
+                 "vec_min_density": 0.0}
+    assert_bit_identical(ref, E.spkadd_auto(mats, cost_model=force_vec))
     force_blocked = {"tree_max_k": 0, "spa_max_accum_elems": 1.0,
+                     "vec_max_accum_elems": 1.0,
                      "blocked_spa_min_density": 0.0}
     assert_bit_identical(ref, E.spkadd_auto(mats, cost_model=force_blocked))
     force_sorted = {"tree_max_k": 0, "spa_max_accum_elems": 1.0,
+                    "vec_max_accum_elems": 1.0,
                     "blocked_spa_max_accum_elems": 1.0}
     assert_bit_identical(ref, E.spkadd_auto(mats, cost_model=force_sorted))
 
@@ -196,7 +242,7 @@ def test_auto_duplicate_keys_within_matrix():
         mats.append(S.from_coords(jnp.asarray(rows), jnp.asarray(cols),
                                   jnp.asarray(vals), (m, n)))
     ref = spkadd(mats, algorithm="sorted")
-    for forced in ("sorted", "spa", "blocked_spa"):
+    for forced in ("sorted", "spa", "vec", "blocked_spa"):
         assert_bit_identical(ref, E._CANONICAL[forced](mats), msg=forced)
 
 
@@ -211,7 +257,7 @@ def test_auto_value_cancellation_keeps_structure():
     neg = S.PaddedCOO(a.keys, -a.vals, a.nnz, a.shape)
     ref = spkadd([a, neg] * 4, algorithm="sorted")  # k=8: non-tree regimes
     assert int(ref.nnz) == int(a.nnz)
-    for forced in ("sorted", "spa", "blocked_spa"):
+    for forced in ("sorted", "spa", "vec", "blocked_spa"):
         assert_bit_identical(ref, E._CANONICAL[forced]([a, neg] * 4),
                              msg=forced)
 
@@ -261,12 +307,15 @@ def test_batched_under_jit_one_program():
                              msg=f"batch {b}")
 
 
-def test_batched_blocked_spa_falls_back_vmappable():
-    """A blocked_spa selection must not crash the vmapped path."""
+@pytest.mark.parametrize("algorithm", ["blocked_spa", "vec"])
+def test_batched_pallas_regimes_fall_back_vmappable(algorithm):
+    """A Pallas-regime selection (vec/blocked_spa) must not crash the
+    vmapped path — it falls back to the dense-SPA scatter, which is
+    canonical-identical."""
     B, k = 2, 8
     colls = [random_collection(300 + b, k, 32, 8, 30)[0] for b in range(B)]
     stacked = E.stack_collections(colls)
-    out = E.spkadd_batched(stacked, algorithm="blocked_spa")
+    out = E.spkadd_batched(stacked, algorithm=algorithm)
     for b in range(B):
         want = spkadd(colls[b], algorithm="sorted")
         assert_bit_identical(want, E.unstack_collection([out], b)[0])
@@ -277,6 +326,53 @@ def test_stack_collections_validates():
     b, _ = random_collection(2, 2, 16, 8, 8)  # different shape
     with pytest.raises(AssertionError):
         E.stack_collections([a, b])
+
+
+# ---------------------------------------------------------------------------
+# ragged batched execution (capacity bucketing)
+# ---------------------------------------------------------------------------
+
+def test_bucket_collections_rounds_capacities():
+    """Capacities 24 and 17 both round to 32 -> one bucket; k=3 and a
+    different shape split off into their own."""
+    colls = [random_collection(1, 4, 32, 8, 24)[0],
+             random_collection(2, 4, 32, 8, 17)[0],
+             random_collection(3, 3, 32, 8, 24)[0],
+             random_collection(4, 4, 16, 8, 24)[0]]
+    buckets = E.bucket_collections(colls)
+    assert len(buckets) == 3
+    sizes = sorted(len(v) for v in buckets.values())
+    assert sizes == [1, 1, 2]
+    for (shape, caps), members in buckets.items():
+        for _, padded in members:
+            assert all(a.cap == c for a, c in zip(padded, caps))
+
+
+def test_batched_ragged_matches_per_collection():
+    """Ragged capacities (and ragged k) must produce the same sums as the
+    per-collection engine, in input order."""
+    colls = [random_collection(10, 4, 32, 8, 24)[0],
+             random_collection(11, 4, 32, 8, 17)[0],  # same bucket as [0]
+             random_collection(12, 3, 32, 8, 24)[0],  # different k
+             random_collection(13, 4, 32, 8, 65)[0]]  # different bucket
+    outs = E.spkadd_batched_ragged(colls)
+    assert len(outs) == len(colls)
+    for coll, out in zip(colls, outs):
+        want = E.spkadd_auto(coll)
+        assert int(out.nnz) == int(want.nnz)
+        np.testing.assert_array_equal(np.asarray(out.to_dense()),
+                                      np.asarray(want.to_dense()))
+        # padded capacity is the pow2-rounded bucket total
+        assert out.cap == sum(S.next_pow2(a.cap) for a in coll)
+
+
+def test_batched_ragged_single_bucket_is_plain_batched():
+    colls = [random_collection(20 + b, 4, 32, 8, 16)[0] for b in range(3)]
+    outs = E.spkadd_batched_ragged(colls)
+    stacked = E.stack_collections(colls)
+    batched = E.spkadd_batched(stacked)
+    for b, out in enumerate(outs):
+        assert_bit_identical(out, E.unstack_collection([batched], b)[0])
 
 
 # ---------------------------------------------------------------------------

@@ -31,6 +31,30 @@ def test_streaming_matches_batch_sum():
     assert acc.n_flushes >= 2
 
 
+def test_streaming_windowed_batched_matches_sequential():
+    """window_batch > 1 reduces buffered windows through one vmapped engine
+    program (spkadd_batched_ragged) — same totals as the sequential
+    per-window path, fewer flushes."""
+    rng = np.random.default_rng(4)
+    m, n = 32, 8
+    seq = StreamingAccumulator((m, n), batch_k=3, cap_budget=m * n)
+    win = StreamingAccumulator((m, n), batch_k=3, cap_budget=m * n,
+                               window_batch=3)
+    total = np.zeros((m, n), np.float32)
+    for i in range(14):  # partial final window AND partial window batch
+        d = _sprand(rng, m, n, 15 + (i % 3))  # ragged capacities
+        total += d
+        a = from_dense(jnp.asarray(d), cap=15 + (i % 3))
+        seq.push(a)
+        win.push(a)
+    np.testing.assert_allclose(np.asarray(win.dense()), total,
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(win.dense()),
+                               np.asarray(seq.dense()), rtol=1e-5, atol=1e-6)
+    assert win.n_flushes < seq.n_flushes
+    assert win.n_seen == seq.n_seen == 14
+
+
 def test_streaming_budget_keeps_heavy_entries():
     """With a tight budget the heaviest entries survive truncation."""
     m, n = 16, 4

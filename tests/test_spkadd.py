@@ -13,7 +13,7 @@ from repro.core import sparse as S
 from repro.core.spkadd import (spkadd, symbolic_nnz,
     symbolic_nnz_per_column, two_way_add)
 
-ALGOS = ["incremental", "tree", "sorted", "spa", "blocked_spa", "hash"]
+ALGOS = ["incremental", "tree", "sorted", "spa", "vec", "blocked_spa", "hash"]
 
 
 def random_sparse(rng, m, n, nnz, cap):
@@ -143,7 +143,7 @@ def test_unsorted_inputs_ok_for_hash_family():
     d, a = random_sparse(rng, 16, 4, 12, cap=16)
     perm = rng.permutation(a.cap)
     shuffled = S.PaddedCOO(a.keys[perm], a.vals[perm], a.nnz, a.shape)
-    for alg in ["spa", "hash", "blocked_spa", "sorted"]:
+    for alg in ["spa", "hash", "vec", "blocked_spa", "sorted"]:
         out = spkadd([shuffled, a], algorithm=alg)
         np.testing.assert_allclose(np.asarray(out.to_dense()), 2 * d,
                                    rtol=1e-5, atol=1e-6, err_msg=alg)
