@@ -1,6 +1,10 @@
-"""Shared benchmark utilities: matrix generators (ER / R-MAT), timing."""
+"""Shared benchmark utilities: matrix generators (ER / R-MAT), timing, and
+the machine-readable record sink CI uploads as ``BENCH_*.json`` artifacts."""
 from __future__ import annotations
 
+import json
+import os
+import platform
 import time
 
 import jax
@@ -58,5 +62,49 @@ def time_fn(fn, *args, warmup=1, iters=5):
     return float(np.median(times) * 1e6)
 
 
+#: Records accumulated by every ``emit`` call in this process, dumped by
+#: ``write_json`` — the machine-readable twin of the CSV lines on stdout.
+RECORDS: list[dict] = []
+
+
 def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}", flush=True)
+    RECORDS.append({"name": name, "value": float(us), "derived": derived})
+
+
+def parse_emit_lines(text: str) -> list[dict]:
+    """Parse ``name,value,derived`` CSV lines (a subprocess's stdout) back
+    into records — benchmarks that fork (fake-device meshes) collect the
+    child's emissions through this."""
+    records = []
+    for line in text.splitlines():
+        parts = line.strip().split(",", 2)
+        if len(parts) < 2:
+            continue
+        try:
+            value = float(parts[1])
+        except ValueError:
+            continue
+        records.append({"name": parts[0], "value": value,
+                        "derived": parts[2] if len(parts) > 2 else ""})
+    return records
+
+
+def write_json(path: str, records: list[dict] | None = None, **meta):
+    """Dump records (default: this process's ``RECORDS``) plus provenance
+    metadata as the ``BENCH_*.json`` artifact schema:
+    ``{"meta": {...}, "records": [{"name", "value", "derived"}, ...]}``."""
+    payload = {
+        "meta": {
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "python": platform.python_version(),
+            **meta,
+        },
+        "records": RECORDS if records is None else records,
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {len(payload['records'])} records to {path}", flush=True)

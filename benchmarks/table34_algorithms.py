@@ -23,7 +23,7 @@ import sys
 import jax
 import numpy as np
 
-from benchmarks.common import emit, gen_collection, time_fn
+from benchmarks.common import emit, gen_collection, time_fn, write_json
 from repro.core.engine import (explain_dispatch, spkadd_auto, spkadd_batched,
                                stack_collections)
 from repro.core.sparse import concat
@@ -145,12 +145,20 @@ def main():
                     help="tiny-shape cross-regime consistency gate (CI)")
     ap.add_argument("--include-kernels", action="store_true",
                     help="also time the Pallas kernel algorithms")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write every emitted record as a BENCH_*.json "
+                         "artifact (machine-readable perf trajectory)")
     args = ap.parse_args()
     if args.smoke:
-        sys.exit(smoke())
+        rc = smoke()
+        if args.json:
+            write_json(args.json, suite="table34_smoke", status=rc)
+        sys.exit(rc)
     run("er", include_kernels=args.include_kernels)
     run("rmat", include_kernels=args.include_kernels)
     run_batched("er")
+    if args.json:
+        write_json(args.json, suite="table34")
 
 
 if __name__ == "__main__":

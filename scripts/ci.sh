@@ -3,6 +3,7 @@
 # on a pre-baked image without network), then run the full suite.
 #
 # Usage: scripts/ci.sh [extra pytest args...]
+# Env:   RESULTS_DIR (default: results) — where BENCH_*.json artifacts land
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,9 +14,19 @@ fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
+RESULTS_DIR="${RESULTS_DIR:-results}"
+
 # benchmark smoke: tiny-shape cross-regime consistency gate — every SpKAdd
 # algorithm (incl. the vec/blocked_spa/hash Pallas kernels) must agree, and
 # every engine-canonical regime must be bit-identical to the sorted
-# reference. Fails the build on any mismatch.
+# reference. Fails the build on any mismatch. Emits serial-store counts as
+# a machine-readable BENCH_*.json artifact (the perf trajectory CI uploads).
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.table34_algorithms --smoke
+    python -m benchmarks.table34_algorithms --smoke \
+    --json "$RESULTS_DIR/BENCH_table34_smoke.json"
+
+# sparse-allreduce traffic model: dense vs top-k+SpKAdd collective bytes on
+# a 1-D (8) and 2-D (4x2) fake-device mesh, wall-timed, emitted as JSON.
+PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.sparse_allreduce_bytes --smoke \
+    --json "$RESULTS_DIR/BENCH_sparse_allreduce.json"

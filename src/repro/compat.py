@@ -47,6 +47,23 @@ def axis_size(axis_name) -> int:
     return jax.core.axis_frame(axis_name)
 
 
+def backend_initialized() -> bool:
+    """True iff jax has already initialized an XLA backend in this process —
+    the point at which ``XLA_FLAGS`` is read and the device count locks.
+
+    Reads the private backend cache (``jax._src.xla_bridge._backends``, the
+    same home on every jax we target); if the internal layout ever drifts,
+    this *fails open* (returns False) — callers that need certainty about
+    the device count must check ``jax.device_count()`` after init, which
+    stays correct on any jax.
+    """
+    try:
+        from jax._src import xla_bridge
+        return bool(xla_bridge._backends)
+    except Exception:
+        return False
+
+
 def cost_analysis_dict(compiled) -> dict:
     """``compiled.cost_analysis()`` as a flat dict on any supported jax.
 

@@ -20,7 +20,13 @@ the form the optimizer applies. Dense allreduce moves 2·(P−1)/P·D bytes per
 worker; the k-way sparse schedule moves P·s, a win when compression ratio
 D/(P·s) > ~0.5 — exactly the regime gradient sparsification targets.
 
-Every function here runs inside ``shard_map`` over the given axis.
+``compressed_gradient_mean`` is the DP-only pytree entry;
+``compressed_gradient_mean_2d`` layers the same schedules onto a 2-D
+('data', 'model') mesh — dense model-axis combine, per-shard sparse
+data-axis reduction, model-axis gather (DESIGN.md §8).
+
+Every function here runs inside ``shard_map`` over the given axis (or axis
+pair).
 """
 from __future__ import annotations
 
@@ -133,32 +139,111 @@ def sparse_allreduce(u: SparseUpdate, axis: str,
     return fn(u, axis)
 
 
-def compressed_gradient_mean(grads, residuals, axis: str, k_fraction: float,
-                             schedule: str = "gather_kway",
-                             selector: str = "block"):
-    """DP gradient reduction with the paper's technique, per pytree leaf.
+#: Leaves smaller than this fall back to dense psum — the sparse stream +
+#: schedule overhead only pays for itself on real tensors. Overridable per
+#: step via the ``min_compress_elems`` knob (tests compress tiny models).
+MIN_COMPRESS_ELEMS = 16384
 
-    Runs INSIDE a shard_map'd train step: ``grads`` are this worker's local
-    dense gradients, ``residuals`` its error-feedback state (same treedef,
-    flat leaves). Returns (mean dense grads, new residuals). Leaves too small
-    to be worth compressing (< 16k elements) fall back to dense psum.
-    """
-    from repro.core.topk import sparsify_with_feedback
 
-    def one_leaf(g, r):
-        flat = g.reshape(-1)
-        n = flat.shape[0]
-        if n < 16384:
-            return jax.lax.pmean(g, axis), r
-        k = max(1, int(n * k_fraction))
-        u, new_r = sparsify_with_feedback(flat.astype(jnp.float32), r, k,
-                                          selector=selector)
-        mean = sparse_allreduce(u, axis, schedule)
-        return mean.reshape(g.shape).astype(g.dtype), new_r
-
+def _leafwise(grads, residuals, one_leaf):
     flat_g, treedef = jax.tree_util.tree_flatten(grads)
     flat_r = treedef.flatten_up_to(residuals)
     out = [one_leaf(g, r) for g, r in zip(flat_g, flat_r)]
     mean_g = treedef.unflatten([o[0] for o in out])
     new_r = treedef.unflatten([o[1] for o in out])
     return mean_g, new_r
+
+
+def compressed_gradient_mean(grads, residuals, axis: str, k_fraction: float,
+                             schedule: str = "gather_kway",
+                             selector: str = "block",
+                             min_compress_elems: int = MIN_COMPRESS_ELEMS):
+    """DP gradient reduction with the paper's technique, per pytree leaf.
+
+    Runs INSIDE a shard_map'd train step: ``grads`` are this worker's local
+    dense gradients, ``residuals`` its error-feedback state (same treedef,
+    flat leaves). Returns (mean dense grads, new residuals). Leaves too small
+    to be worth compressing (< ``min_compress_elems``) fall back to dense
+    psum.
+    """
+    from repro.core.topk import global_k, sparsify_with_feedback
+
+    def one_leaf(g, r):
+        flat = g.reshape(-1)
+        n = flat.shape[0]
+        if n < min_compress_elems:
+            return jax.lax.pmean(g, axis), r
+        u, new_r = sparsify_with_feedback(flat.astype(jnp.float32), r,
+                                          global_k(n, k_fraction),
+                                          selector=selector)
+        mean = sparse_allreduce(u, axis, schedule)
+        return mean.reshape(g.shape).astype(g.dtype), new_r
+
+    return _leafwise(grads, residuals, one_leaf)
+
+
+def compressed_gradient_mean_2d(grads, residuals, data_axis: str,
+                                model_axis: str, k_fraction: float,
+                                schedule: str = "gather_kway",
+                                selector: str = "block",
+                                model_reduce: str = "reduce_scatter",
+                                min_compress_elems: int = MIN_COMPRESS_ELEMS):
+    """Sparse-DP × TP gradient reduction (DESIGN.md §8), per pytree leaf.
+
+    Runs INSIDE a shard_map over a 2-D ``(data_axis, model_axis)`` mesh where
+    every device holds the gradient of its own microbatch (the global batch
+    is split over the flattened D×T grid; tensor-parallel-partial gradients
+    look exactly the same — a per-device partial that must first be combined
+    over the model axis). Per leaf, the reduction layers per-axis schedules:
+
+    1. **model axis (dense)** — the T partials are combined densely:
+       ``model_reduce="reduce_scatter"`` uses ``psum_scatter`` so each model
+       shard receives only its 1/T slice of the combined gradient (the
+       traffic-optimal choice); ``"psum"`` combines the full vector and
+       slices locally (one fewer collective flavour — useful where
+       ``psum_scatter`` lowers poorly).
+    2. **data axis (sparse)** — each model shard top-k-sparsifies its slice
+       against its *own* error-feedback residual (``per_shard_k`` keeps the
+       global budget) and reduces it over ``data_axis`` with the chosen
+       SpKAdd schedule (``gather_kway`` / ``tree_2way`` / ``ring_2way``).
+    3. **model axis (gather)** — the dense per-slice means are all-gathered
+       back so every device returns the full dense mean in the replicated
+       layout the optimizer expects.
+
+    ``residuals`` leaves are per-shard: flat fp32 of length
+    ``ceil(leaf.size / T)`` (the padded slice this model shard owns). Leaves
+    smaller than ``min_compress_elems`` fall back to a dense two-axis pmean.
+    Returns (mean dense grads, new per-shard residuals).
+    """
+    from repro.core.topk import per_shard_k, sparsify_with_feedback
+
+    if model_reduce not in ("reduce_scatter", "psum"):
+        raise ValueError(f"unknown model_reduce {model_reduce!r}; "
+                         "choose 'reduce_scatter' or 'psum'")
+    t = _axis_size(model_axis)
+
+    def one_leaf(g, r):
+        flat = g.reshape(-1)
+        n = flat.shape[0]
+        if n < min_compress_elems:
+            return jax.lax.pmean(jax.lax.pmean(g, model_axis), data_axis), r
+        shard_len = -(-n // t)
+        pad = shard_len * t - n
+        if pad:
+            flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+        if model_reduce == "reduce_scatter":
+            part = jax.lax.psum_scatter(flat, model_axis,
+                                        scatter_dimension=0, tiled=True)
+        else:  # psum: combine full, slice locally
+            full = jax.lax.psum(flat, model_axis)
+            me = jax.lax.axis_index(model_axis)
+            part = jax.lax.dynamic_slice(full, (me * shard_len,), (shard_len,))
+        part = part / t  # mean over the model partials
+        u, new_r = sparsify_with_feedback(part.astype(jnp.float32), r,
+                                          per_shard_k(n, k_fraction, t),
+                                          selector=selector)
+        mean_shard = sparse_allreduce(u, data_axis, schedule)
+        mean = jax.lax.all_gather(mean_shard, model_axis, tiled=True)
+        return mean[:n].reshape(g.shape).astype(g.dtype), new_r
+
+    return _leafwise(grads, residuals, one_leaf)

@@ -60,6 +60,28 @@ def topk_block(x: jax.Array, k: int, block: int = 4096) -> SparseUpdate:
     return SparseUpdate(flat_idx.astype(jnp.int32), vals, size)
 
 
+def global_k(n: int, k_fraction: float) -> int:
+    """The unsharded top-k budget for a flat tensor of ``n`` elements."""
+    return max(1, int(n * k_fraction))
+
+
+def per_shard_k(n: int, k_fraction: float, n_shards: int) -> int:
+    """Per-shard top-k budget under 1/``n_shards`` tensor sharding.
+
+    Under ``shard_map`` every shard runs the *same* program, so the budget
+    must be shard-independent: each shard gets ``ceil(global_k / n_shards)``,
+    which preserves the global budget to rounding (total selected is in
+    ``[global_k, global_k + n_shards - 1]``) instead of silently re-applying
+    ``k_fraction`` to the shard length (which would under-select whenever the
+    unsharded budget doesn't divide evenly). At ``k_fraction == 1.0`` the
+    per-shard budget equals the padded shard length ``ceil(n / n_shards)``,
+    so sharded selection stays lossless.
+    """
+    if n_shards <= 1:
+        return global_k(n, k_fraction)
+    return max(1, -(-global_k(n, k_fraction) // n_shards))
+
+
 def densify(u: SparseUpdate) -> jax.Array:
     out = jnp.zeros((u.size + 1,), u.val.dtype)
     out = out.at[jnp.clip(u.idx, 0, u.size)].add(u.val)

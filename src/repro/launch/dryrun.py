@@ -1,11 +1,34 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# importing repro.compat imports jax, which is safe pre-XLA_FLAGS: the flag
+# is only read when a *backend* initializes, and backend_initialized() is
+# exactly the probe for whether that already happened
+from repro.compat import backend_initialized
+
+N_FAKE_DEVICES = 512
+
+if backend_initialized():
+    # Setting XLA_FLAGS now would be a silent no-op: the process would run
+    # the "512-device" dry-run on however many devices the first backend
+    # init saw, producing wrong meshes/shardings. Fail loudly instead.
+    raise RuntimeError(
+        "repro.launch.dryrun imported after jax initialized a backend: "
+        "XLA_FLAGS=--xla_force_host_platform_device_count="
+        f"{N_FAKE_DEVICES} can no longer take effect (the device count "
+        "locked at first backend init). Run the dry-run in a fresh "
+        "process (`python -m repro.launch.dryrun ...`) or import this "
+        "module before anything touches jax devices.")
+
+os.environ["XLA_FLAGS"] = \
+    f"--xla_force_host_platform_device_count={N_FAKE_DEVICES}"
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
-The two lines above MUST stay the first statements — jax locks the device
-count at first backend init, and the production meshes need 512 placeholder
-devices. Smoke tests / benches import other modules and see 1 device.
+The statements above MUST stay first — jax locks the device count at first
+backend init, and the production meshes need 512 placeholder devices; if a
+backend already exists the import fails loudly instead of silently running
+on the wrong device count. Smoke tests / benches import other modules and
+see 1 device.
 
 For each cell:
   jit(step, in_shardings, out_shardings).lower(ShapeDtypeStructs).compile()
@@ -147,6 +170,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
 
 def main():
+    n = jax.device_count()
+    if n != N_FAKE_DEVICES:  # e.g. an inherited XLA_FLAGS overrode ours
+        raise SystemExit(
+            f"dry-run needs {N_FAKE_DEVICES} placeholder devices but jax "
+            f"initialized with {n}; unset any conflicting XLA_FLAGS and "
+            "rerun in a fresh process")
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None, choices=list(SHAPES))

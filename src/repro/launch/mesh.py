@@ -22,6 +22,19 @@ def make_dp_mesh(n: int | None = None):
     return jax.make_mesh((n,), ("data",))
 
 
+def make_dp_tp_mesh(data: int | None = None, model: int = 1):
+    """('data', 'model') mesh for the sparse-DP × TP composition
+    (DESIGN.md §8). ``data=None`` takes every local device divided by
+    ``model``; model-axis neighbours stay physically adjacent (the dense
+    psum_scatter/all_gather legs ride the fast links)."""
+    if data is None:
+        n = len(jax.devices())
+        if n % model:
+            raise ValueError(f"{n} devices do not split into model={model}")
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
 def chips(mesh) -> int:
     import numpy as np
     return int(np.prod(list(mesh.shape.values())))

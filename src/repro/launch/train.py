@@ -30,14 +30,17 @@ import numpy as np
 
 from repro.checkpoint.checkpoint import save_on_signal
 from repro.configs import get_config, get_smoke_config
+from repro.launch.mesh import make_dp_tp_mesh
 from repro.data import make_batch
 from repro.models import build_model
 from repro.models.common import ShapeConfig, SHAPES
 from repro.optim import adamw_init
 from repro.runtime import Supervisor
 from repro.sharding import mesh_context
-from repro.sharding.params import batch_shardings, params_shardings
-from repro.train import TrainHParams, make_train_step
+from repro.sharding.params import (batch_shardings, ef_shardings,
+                                   params_shardings)
+from repro.train import (TrainHParams, init_ef_state,
+                         make_compressed_train_step, make_train_step)
 
 
 def main():
@@ -51,6 +54,16 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--mesh", default="auto",
                     help="'auto' (all local devices as data axis) or 'DxM'")
+    ap.add_argument("--compress", action="store_true",
+                    help="top-k + SpKAdd sparse-allreduce gradient "
+                         "compression; composes with a model axis > 1 "
+                         "(sparse-DP × TP, DESIGN.md §8)")
+    ap.add_argument("--k-fraction", type=float, default=0.01)
+    ap.add_argument("--schedule", default="gather_kway",
+                    choices=["gather_kway", "tree_2way", "ring_2way"])
+    ap.add_argument("--model-reduce", default="reduce_scatter",
+                    choices=["reduce_scatter", "psum"],
+                    help="how TP-partial gradients combine over 'model'")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -65,33 +78,60 @@ def main():
 
     n_dev = len(jax.devices())
     if args.mesh == "auto":
-        mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
+        mesh = make_dp_tp_mesh(model=1)
     else:
-        d, m = (int(x) for x in args.mesh.split("x"))
-        mesh = jax.make_mesh((d, m), ("data", "model"))
+        d, t = (int(x) for x in args.mesh.split("x"))
+        mesh = make_dp_tp_mesh(data=d, model=t)
     print(f"mesh: {dict(mesh.shape)} over {n_dev} devices")
 
     with mesh_context(mesh):
         params = model.init(jax.random.PRNGKey(0))
-        p_sh = params_shardings(params, mesh)
-        params = jax.tree.map(jax.device_put, params, p_sh)
-        opt = adamw_init(params)
-        step_impl = jax.jit(make_train_step(model, hp))
+        if args.compress:
+            # the explicit-collective path replicates params/opt over the
+            # mesh (its shard_map in_specs are P()); EF residuals shard
+            # per (data worker, model shard)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            rep = NamedSharding(mesh, P())
+            params = jax.tree.map(lambda x: jax.device_put(x, rep), params)
+            opt = adamw_init(params)
+            ef = init_ef_state(params, mesh.shape["data"],
+                               model_shards=mesh.shape["model"])
+            ef = jax.tree.map(jax.device_put, ef, ef_shardings(ef, mesh))
+            step_impl = jax.jit(make_compressed_train_step(
+                model, mesh, hp, k_fraction=args.k_fraction,
+                schedule=args.schedule, model_reduce=args.model_reduce))
+            state0 = (params, opt, ef)
+        else:
+            p_sh = params_shardings(params, mesh)
+            params = jax.tree.map(jax.device_put, params, p_sh)
+            opt = adamw_init(params)
+            step_impl = jax.jit(make_train_step(model, hp))
+            state0 = (params, opt)
 
         def step_fn(state, step):
-            p, o = state
             batch = make_batch(cfg, shape, step)
             batch = jax.tree.map(jax.device_put, batch,
                                  batch_shardings(batch, mesh))
-            p, o, metrics = step_impl(p, o, batch)
+            if args.compress:
+                p, o, e, metrics = step_impl(state[0], state[1], state[2],
+                                             batch)
+                new_state = (p, o, e)
+            else:
+                p, o, metrics = step_impl(state[0], state[1], batch)
+                new_state = (p, o)
             if step % 10 == 0:
-                print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
-                      f"lr {float(metrics['lr']):.2e}", flush=True)
-            return (p, o)
+                lr = metrics.get("lr")
+                lr_txt = f" lr {float(lr):.2e}" if lr is not None else ""
+                print(f"step {step:5d} loss {float(metrics['loss']):.4f}"
+                      f"{lr_txt}", flush=True)
+            return new_state
 
-        ckpt_dir = args.ckpt_dir or f"/tmp/repro_{cfg.arch_id}_ckpt"
+        # compressed state has a different pytree ((p, o, ef) vs (p, o)), so
+        # the two modes must not share an auto-resume directory
+        suffix = "_compressed" if args.compress else ""
+        ckpt_dir = args.ckpt_dir or f"/tmp/repro_{cfg.arch_id}_ckpt{suffix}"
         sup = Supervisor(ckpt_dir, ckpt_every=args.ckpt_every, async_ckpt=True)
-        state_holder = {"state": (params, opt), "step": 0}
+        state_holder = {"state": state0, "step": 0}
         save_on_signal(ckpt_dir,
                        lambda: (state_holder["step"], state_holder["state"]))
 
@@ -100,7 +140,7 @@ def main():
             state_holder["state"], state_holder["step"] = new_state, step + 1
             return new_state
 
-        state, steps = sup.run((params, opt), tracked_step, args.steps)
+        state, steps = sup.run(state0, tracked_step, args.steps)
         print(f"finished at step {steps}; restarts={sup.restarts}, "
               f"stragglers={len(sup.monitor.flagged)}")
 

@@ -102,6 +102,26 @@ def batch_shardings(batch, mesh: Mesh):
         lambda leaf: NamedSharding(mesh, batch_spec(leaf, mesh)), batch)
 
 
+def ef_spec(leaf, mesh: Mesh) -> P:
+    """Error-feedback residual specs for the compressed training path.
+
+    DP-only layout ``(P, size)`` shards the worker dim over 'data'; the DP×TP
+    layout ``(D, T, shard_len)`` (``init_ef_state(..., model_shards=T)``)
+    shards (worker, model-shard) over ('data', 'model') so each device holds
+    exactly its own per-shard residual slice.
+    """
+    if leaf.ndim >= 3 and "model" in mesh.axis_names:
+        spec = ("data", "model") + (None,) * (leaf.ndim - 2)
+    else:
+        spec = ("data",) + (None,) * (leaf.ndim - 1)
+    return _validated(spec, leaf.shape, mesh)
+
+
+def ef_shardings(ef_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, ef_spec(leaf, mesh)), ef_tree)
+
+
 def cache_spec(leaf, cfg, mesh: Mesh, batch: int) -> P:
     """KV / SSM cache specs, cfg-aware (trailing-shape matched):
 

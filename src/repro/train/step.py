@@ -5,10 +5,16 @@ allreduce over the data axis, via shard_map).
 The standard path relies on XLA SPMD: batch sharded over data ⇒ gradient
 reduction lowers to reduce-scatter/all-reduce automatically. The compressed
 path makes the reduction explicit so the collective itself is the paper's
-SpKAdd (schedules: gather_kway / tree_2way / ring_2way) — it supports
-DP-only meshes (model axis folded away), which is the paper's sparse
-allreduce setting; composing sparse-DP with TP is plumbing, not science, and
-is documented in DESIGN.md.
+SpKAdd (schedules: gather_kway / tree_2way / ring_2way). Two mesh regimes:
+
+- DP-only ``('data',)`` — the paper's sparse-allreduce setting: params
+  replicated, batch sharded over 'data', one flat residual per worker.
+- DP×TP ``('data','model')`` — the composition DESIGN.md §8 specifies:
+  the batch splits over the flattened D×T grid, per-device gradient partials
+  are first combined densely over 'model' (psum_scatter or psum+slice), each
+  model shard top-k-sparsifies its 1/T slice against a per-shard residual,
+  reduces it sparsely over 'data', and the dense per-slice means are
+  all-gathered back over 'model'.
 """
 from __future__ import annotations
 
@@ -21,8 +27,10 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.allreduce import compressed_gradient_mean
+from repro.core.allreduce import (MIN_COMPRESS_ELEMS, compressed_gradient_mean,
+                                  compressed_gradient_mean_2d)
 from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.sharding import mesh_context
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,60 +128,110 @@ def make_decode_step(model, attn_chunk: int = 4096) -> Callable:
 # the paper's technique as a first-class training feature
 # ---------------------------------------------------------------------------
 
-def init_ef_state(params, n_workers: int):
-    """Error-feedback residuals: one flat fp32 residual per worker per leaf
-    (global arrays (P, size), sharded P('data') at use)."""
+def _shard_len(size: int, model_shards: int) -> int:
+    return -(-size // model_shards)
+
+
+def init_ef_state(params, n_workers: int, model_shards: int = 1):
+    """Error-feedback residuals, one flat fp32 residual per *shard* per leaf.
+
+    - ``model_shards == 1`` (DP-only): global arrays ``(P, size)``, sharded
+      ``P('data')`` at use — one full-length residual per data worker.
+    - ``model_shards > 1`` (DP×TP): global arrays
+      ``(D, T, ceil(size / T))``, sharded ``P('data', 'model')`` at use —
+      each device carries only the residual of the gradient slice its model
+      shard owns (the per-shard layout DESIGN.md §8 specifies).
+    """
+    if model_shards <= 1:
+        return jax.tree.map(
+            lambda p: jnp.zeros((n_workers, p.size), jnp.float32), params)
     return jax.tree.map(
-        lambda p: jnp.zeros((n_workers, p.size), jnp.float32), params)
+        lambda p: jnp.zeros(
+            (n_workers, model_shards, _shard_len(p.size, model_shards)),
+            jnp.float32), params)
 
 
 def make_compressed_train_step(model, mesh: Mesh,
                                hp: TrainHParams = TrainHParams(), *,
                                k_fraction: float = 0.01,
                                schedule: str = "gather_kway",
-                               selector: str = "block") -> Callable:
-    """DP training with top-k sparsified gradients reduced via SpKAdd.
+                               selector: str = "block",
+                               model_reduce: str = "reduce_scatter",
+                               min_compress_elems: int = MIN_COMPRESS_ELEMS
+                               ) -> Callable:
+    """Training with top-k sparsified gradients reduced via SpKAdd.
 
-    Mesh must expose a 'data' axis; params/optimizer are replicated across it
-    (pure DP — the paper's sparse-allreduce setting). Returns a jit-able
+    Mesh must expose a 'data' axis; params/optimizer are replicated across
+    the mesh. On a DP-only mesh this is the paper's sparse-allreduce setting.
+    On a ``('data', 'model')`` mesh with model size T > 1 the step runs the
+    DP×TP composition (DESIGN.md §8): the batch splits over the flattened
+    D×T grid, gradients combine densely over 'model' (``model_reduce``:
+    "reduce_scatter" | "psum"), and each model shard sparse-reduces its 1/T
+    slice over 'data' against its own residual (``init_ef_state(...,
+    model_shards=T)`` layout). Returns a jit-able
     fn(params, opt_state, ef, batch) -> (params, opt_state, ef, metrics).
     """
-    n_workers = mesh.shape["data"]
+    use_2d = "model" in mesh.axis_names and mesh.shape["model"] > 1
 
     def local_step(params, opt_state, ef, batch):
-        # leaves arrive with a leading local-shard dim of 1
+        # leaves arrive with leading local-shard dims of 1
         params = jax.tree.map(lambda x: x, params)
 
         def loss_fn(p):
-            return model.loss(p, batch, remat=hp.remat, ce_chunk=hp.ce_chunk,
-                              attn_chunk=hp.attn_chunk)
+            # inside shard_map every mesh axis is manual, so the model's
+            # logical-axis sharding constraints must not fire (they would
+            # name manual axes); the collectives below do the sharding
+            with mesh_context(None):
+                return model.loss(p, batch, remat=hp.remat,
+                                  ce_chunk=hp.ce_chunk,
+                                  attn_chunk=hp.attn_chunk)
 
         loss, grads = jax.value_and_grad(loss_fn)(params)
-        residuals = jax.tree.map(lambda r: r[0], ef)
-        mean_grads, new_res = compressed_gradient_mean(
-            grads, residuals, "data", k_fraction, schedule=schedule,
-            selector=selector)
-        loss = jax.lax.pmean(loss, "data")
+        if use_2d:
+            residuals = jax.tree.map(lambda r: r[0, 0], ef)
+            mean_grads, new_res = compressed_gradient_mean_2d(
+                grads, residuals, "data", "model", k_fraction,
+                schedule=schedule, selector=selector,
+                model_reduce=model_reduce,
+                min_compress_elems=min_compress_elems)
+            loss = jax.lax.pmean(jax.lax.pmean(loss, "model"), "data")
+            new_ef = jax.tree.map(lambda r: r[None, None], new_res)
+        else:
+            residuals = jax.tree.map(lambda r: r[0], ef)
+            mean_grads, new_res = compressed_gradient_mean(
+                grads, residuals, "data", k_fraction, schedule=schedule,
+                selector=selector, min_compress_elems=min_compress_elems)
+            loss = jax.lax.pmean(loss, "data")
+            new_ef = jax.tree.map(lambda r: r[None], new_res)
         lr = cosine_schedule(opt_state.step, peak_lr=hp.peak_lr,
                              warmup=hp.warmup, total=hp.total_steps)
         new_params, new_state, gnorm = adamw_update(
             params, mean_grads, opt_state, lr=lr,
             weight_decay=hp.weight_decay, max_grad_norm=hp.max_grad_norm)
-        new_ef = jax.tree.map(lambda r: r[None], new_res)
         return new_params, new_state, new_ef, {"loss": loss, "grad_norm": gnorm}
 
     rep = P()
+    ef_spec = P("data", "model") if use_2d else P("data")
+    batch_axes = ("data", "model") if use_2d else "data"
 
     def specs_like(tree, spec):
         return jax.tree.map(lambda _: spec, tree)
+
+    def batch_spec(leaf):
+        # mrope position arrays carry a leading (3,) stream dim; the batch
+        # dim (split over the full device grid) comes second there.
+        if leaf.ndim >= 2 and leaf.shape[0] == 3:
+            return P(None, batch_axes)
+        return P(batch_axes)
 
     def step(params, opt_state, ef, batch):
         f = shard_map(
             local_step, mesh=mesh,
             in_specs=(specs_like(params, rep), specs_like(opt_state, rep),
-                      specs_like(ef, P("data")), specs_like(batch, P("data"))),
+                      specs_like(ef, ef_spec),
+                      jax.tree.map(batch_spec, batch)),
             out_specs=(specs_like(params, rep), specs_like(opt_state, rep),
-                       specs_like(ef, P("data")),
+                       specs_like(ef, ef_spec),
                        {"loss": rep, "grad_norm": rep}),
             check_vma=False)
         return f(params, opt_state, ef, batch)

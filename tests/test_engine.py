@@ -366,6 +366,59 @@ def test_batched_ragged_matches_per_collection():
         assert out.cap == sum(S.next_pow2(a.cap) for a in coll)
 
 
+def test_batched_ragged_k1_collections():
+    """k=1 'collections' must still dedup duplicate keys and bit-match the
+    per-collection engine (k=1 routes through the compress). Caps are
+    already powers of two, so the bucket rounding is the identity and the
+    outputs compare bit-for-bit."""
+    colls = [random_collection(40, 1, 32, 8, 16)[0],
+             random_collection(41, 1, 32, 8, 16)[0],   # same bucket
+             random_collection(42, 1, 16, 4, 8)[0]]    # own bucket (shape)
+    assert len(E.bucket_collections(colls)) == 2
+    outs = E.spkadd_batched_ragged(colls)
+    for coll, out in zip(colls, outs):
+        assert_bit_identical(E.spkadd_auto(coll), out)
+
+
+def test_batched_ragged_bucket_boundary_at_pow2():
+    """A capacity exactly at a power of two must not round up a level: 32
+    stays 32 (sharing its bucket with 31 -> 32) while 33 rounds to 64 and
+    splits off. Results must match the per-collection engine; the exact-pow2
+    member bit-for-bit, the padded members as a superset layout (same
+    leading keys/values, extra sentinel slots)."""
+    c32 = random_collection(50, 4, 32, 8, 32)[0]
+    c31 = random_collection(51, 4, 32, 8, 31)[0]
+    c33 = random_collection(52, 4, 32, 8, 33)[0]
+    buckets = E.bucket_collections([c32, c31, c33])
+    assert len(buckets) == 2
+    assert sorted(caps for _, caps in buckets) == [(32,) * 4, (64,) * 4]
+    outs = E.spkadd_batched_ragged([c32, c31, c33])
+    assert_bit_identical(E.spkadd_auto(c32), outs[0])
+    for coll, out in zip([c31, c33], outs[1:]):
+        want = E.spkadd_auto(coll)
+        assert int(out.nnz) == int(want.nnz)
+        cap = want.cap
+        np.testing.assert_array_equal(np.asarray(out.keys[:cap]),
+                                      np.asarray(want.keys))
+        np.testing.assert_array_equal(np.asarray(out.vals[:cap]),
+                                      np.asarray(want.vals))
+        assert np.all(np.asarray(out.keys[cap:]) ==
+                      S.sentinel_key(out.shape))
+        assert np.all(np.asarray(out.vals[cap:]) == 0.0)
+
+
+def test_batched_ragged_all_empty_batch():
+    """A batch whose every collection is all-empty must come back all-empty,
+    bit-identical to the per-collection engine (sentinel invariant intact)."""
+    colls = [[S.make_empty((32, 8), 16) for _ in range(3)] for _ in range(4)]
+    outs = E.spkadd_batched_ragged(colls)
+    for coll, out in zip(colls, outs):
+        assert_bit_identical(E.spkadd_auto(coll), out)
+        assert int(out.nnz) == 0
+        assert np.all(np.asarray(out.keys) == S.sentinel_key((32, 8)))
+        assert np.all(np.asarray(out.vals) == 0.0)
+
+
 def test_batched_ragged_single_bucket_is_plain_batched():
     colls = [random_collection(20 + b, 4, 32, 8, 16)[0] for b in range(3)]
     outs = E.spkadd_batched_ragged(colls)

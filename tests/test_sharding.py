@@ -57,6 +57,56 @@ print('sharding specs ok')
 """, n_devices=512)
 
 
+def test_per_shard_k_budget():
+    """Per-shard top-k budgets preserve the global budget to rounding
+    (pure logic, no devices)."""
+    from repro.core.topk import global_k, per_shard_k
+
+    for n, frac, t in [(100_000, 0.01, 4), (16384, 0.05, 2), (999, 1.0, 4),
+                       (65536, 0.001, 8)]:
+        k = global_k(n, frac)
+        ks = per_shard_k(n, frac, t)
+        assert k <= ks * t <= k + t - 1, (n, frac, t, k, ks)
+    # full k: the budget covers the padded shard length, so sharded
+    # selection stays lossless
+    assert per_shard_k(10, 1.0, 4) == 3   # == ceil(10/4) == shard length
+    assert per_shard_k(8, 1.0, 2) == 4
+    # never zero, degenerate single shard == unsharded budget
+    assert per_shard_k(100, 1e-6, 8) == 1
+    assert per_shard_k(1000, 0.01, 1) == global_k(1000, 0.01)
+
+
+def test_ef_specs_dp_and_2d(multidevice):
+    multidevice(r"""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.sharding.params import ef_spec, ef_shardings
+from repro.train import init_ef_state
+
+mesh = jax.make_mesh((4, 2), ('data', 'model'))
+sd = jax.ShapeDtypeStruct
+# DP-only layout (P, size): worker dim over data
+assert ef_spec(sd((4, 1000), jnp.float32), mesh) == P('data', None)
+# DP x TP layout (D, T, shard_len): (worker, model shard) over (data, model)
+assert ef_spec(sd((4, 2, 500), jnp.float32), mesh) == P('data', 'model', None)
+# non-divisible dims drop their axis instead of failing to lower
+assert ef_spec(sd((3, 1000), jnp.float32), mesh) == P(None, None)
+
+# init_ef_state per-shard layout: (D, T, ceil(size/T)), odd sizes padded
+params = {'w': jnp.zeros((7, 3)), 'b': jnp.zeros((5,))}
+ef = init_ef_state(params, 4, model_shards=2)
+assert ef['w'].shape == (4, 2, 11)   # ceil(21/2)
+assert ef['b'].shape == (4, 2, 3)    # ceil(5/2)
+sh = ef_shardings(ef, mesh)
+assert sh['w'].spec == P('data', 'model', None)
+# DP-only layout unchanged
+ef1 = init_ef_state(params, 4)
+assert ef1['w'].shape == (4, 21)
+assert ef_shardings(ef1, mesh)['w'].spec == P('data', None)
+print('ef specs ok')
+""", n_devices=8)
+
+
 def test_multipod_dp_axes(multidevice):
     multidevice(r"""
 import jax, jax.numpy as jnp

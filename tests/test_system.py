@@ -32,6 +32,20 @@ def test_train_launcher_smoke():
     assert "finished at step 12" in out
 
 
+def test_train_launcher_compressed_2d_smoke():
+    """--compress on a ('data','model') 2x2 mesh: the launcher-level DP×TP
+    composition (replicated params, per-shard EF, in-model sharding
+    constraints disabled inside shard_map) must run end to end."""
+    subprocess.run(["rm", "-rf", "/tmp/test_sys_ckpt_c2d"], check=True)
+    out = _run(["-m", "repro.launch.train", "--arch", "smollm-135m",
+                "--smoke", "--steps", "4", "--ckpt-every", "4",
+                "--mesh", "2x2", "--compress", "--k-fraction", "0.05",
+                "--ckpt-dir", "/tmp/test_sys_ckpt_c2d"],
+               env_extra={"XLA_FLAGS":
+                          "--xla_force_host_platform_device_count=4"})
+    assert "finished at step 4" in out
+
+
 def test_train_launcher_resume():
     """Kill after 8 steps (checkpoint at 6), relaunch, must resume not restart."""
     ckpt = "/tmp/test_sys_ckpt_resume"
