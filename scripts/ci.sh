@@ -30,3 +30,11 @@ PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.sparse_allreduce_bytes --smoke \
     --json "$RESULTS_DIR/BENCH_sparse_allreduce.json"
+
+# I/O oracle: the one-pass partitioned sliding grid must read each input
+# chunk exactly once (the paper's I/O lower bound) at the production launch
+# geometry, while the legacy all-pairs grid pays parts x. Fails the build
+# on any violation; emits the modeled load counts as JSON.
+PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.spkadd_io --smoke \
+    --json "$RESULTS_DIR/BENCH_spkadd_io.json"

@@ -32,6 +32,7 @@ WEIGHTS = {
     "test_spkadd.py": 6,
     "test_engine.py": 5,
     "test_vec_accum.py": 5,
+    "test_partition.py": 5,
     "test_kernels.py": 4,
     "test_layers.py": 3,
     "test_extensions.py": 3,

@@ -11,9 +11,12 @@ Public API:
 """
 from repro.core.sparse import (PaddedCOO, from_coords, from_dense, make_empty,
                                compress, compress_plan, concat, sort_by_key,
-                               with_capacity)
+                               with_capacity, plan_and_partition,
+                               partition_steps, stable_argsort, sort_calls)
 from repro.core.engine import (RegimeSignals, regime_signals,
                                select_algorithm, explain_dispatch,
+                               explain_batched_dispatch,
+                               batched_regime_signals,
                                spkadd_auto, spkadd_batched,
                                spkadd_batched_ragged, spkadd_run,
                                stack_collections, unstack_collection,

@@ -33,10 +33,23 @@ vectorized folds (vec regime, ``kernels/vec_accum``) — all of which fold
 each key's contributions in the same stream order. Downstream callers can
 therefore swap regimes freely without perturbing checkpoints or tests.
 
-:func:`spkadd_batched` vmaps the engine over a *stack* of B collections
-(shared logical shape and capacities, independent sums) so streaming-graph
-and gradient-accumulation workloads add B collections in one XLA program
-instead of a Python loop.
+**Shared-sort contract (one-pass partitioned regimes).** The ``vec`` and
+``blocked_spa`` regimes run the stream-partitioned sliding accumulator
+(:mod:`repro.kernels.partition`): the canonical plan's stable argsort is
+the *only* sort on the path — its order doubles as the partition sort
+because parts are key-aligned ranges (``sparse.plan_and_partition``), the
+kernel wrappers take the pre-sorted stream and never re-sort, and each
+input chunk is read exactly once (the paper's I/O lower bound, vs the
+legacy grid's ``parts × N``). ``sparse.sort_calls()`` counts the stable
+sorts; tests pin the count at one per engine call.
+
+:func:`spkadd_batched` adds a *stack* of B collections (shared logical
+shape and capacities, independent sums) in one XLA program instead of a
+Python loop: pure-jnp regimes are vmapped, while a ``vec``/``blocked_spa``
+selection runs the batched partitioned Pallas launch (leading batch grid
+dimension, per-batch step tables) — no silent downgrade to the dense
+scatter; :func:`explain_batched_dispatch` reports the requested and
+effective algorithm.
 """
 from __future__ import annotations
 
@@ -49,8 +62,9 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparse import (PaddedCOO, compress_plan, concat, next_pow2,
-                               sentinel_key, with_capacity)
+from repro.core.sparse import (CompressPlan, PaddedCOO, compress_plan, concat,
+                               next_pow2, plan_and_partition, sentinel_key,
+                               with_capacity)
 from repro.core import spkadd as _alg
 
 
@@ -252,16 +266,30 @@ def scatter_accumulate(keys: jax.Array, vals: jax.Array,
     return acc[:length]
 
 
+def _canonical_gather(out_keys: jax.Array, nnz: jax.Array, flat: jax.Array,
+                      sent: int, dtype) -> jax.Array:
+    """The canonical value gather every dense-accumulator regime shares —
+    single-collection and batched (vmapped) paths must use this one
+    function so their sentinel/nnz/dtype conventions can never diverge."""
+    gather_keys = jnp.where(out_keys != sent, out_keys, 0)
+    return jnp.where(jnp.arange(out_keys.shape[0]) < nnz,
+                     flat[gather_keys], 0.0).astype(dtype)
+
+
+def _canonical_from_plan(cat: PaddedCOO, plan: CompressPlan,
+                         flat: jax.Array) -> PaddedCOO:
+    """Pair a precomputed canonical plan with per-key values gathered from a
+    dense accumulator ``flat`` (col-major, ``flat[key]``)."""
+    out_vals = _canonical_gather(plan.out_keys, plan.nnz, flat,
+                                 sentinel_key(cat.shape), cat.vals.dtype)
+    return PaddedCOO(keys=plan.out_keys, vals=out_vals, nnz=plan.nnz,
+                     shape=cat.shape)
+
+
 def _canonical_from_flat(cat: PaddedCOO, flat: jax.Array) -> PaddedCOO:
     """Pair the canonical structural layout of ``cat`` with per-key values
     gathered from a dense accumulator ``flat`` (col-major, ``flat[key]``)."""
-    plan = compress_plan(cat.keys, cat.shape)
-    sent = sentinel_key(cat.shape)
-    gather_keys = jnp.where(plan.out_keys != sent, plan.out_keys, 0)
-    out_vals = jnp.where(jnp.arange(cat.cap) < plan.nnz,
-                         flat[gather_keys], 0.0).astype(cat.vals.dtype)
-    return PaddedCOO(keys=plan.out_keys, vals=out_vals, nnz=plan.nnz,
-                     shape=cat.shape)
+    return _canonical_from_plan(cat, compress_plan(cat.keys, cat.shape), flat)
 
 
 def _run_spa(mats: Sequence[PaddedCOO],
@@ -274,47 +302,92 @@ def _run_spa(mats: Sequence[PaddedCOO],
     return _canonical_from_flat(cat, flat)
 
 
-def _run_blocked_spa(mats: Sequence[PaddedCOO],
+def _partition_fold(regime: str, geom, vmem_budget_bytes: int,
+                    cost_model: Optional[Dict[str, float]]) -> str:
+    """In-tile fold for a partitioned launch: ``blocked_spa`` keeps the
+    serial fidelity scatter; ``vec`` picks one-hot vs sort-fold on the cost
+    model's tile-size boundary (one-hot additionally requires its
+    ``(chunk × part_elems)`` intermediates to fit the VMEM budget)."""
+    if regime == "blocked_spa":
+        return "serial"
+    cm = default_cost_model()
+    if cost_model:
+        cm.update(cost_model)
+    onehot_bytes = geom.chunk * geom.part_elems * 8
+    return "onehot" if (geom.part_elems <= cm["vec_onehot_max_block_elems"]
+                        and onehot_bytes <= vmem_budget_bytes) else "sort"
+
+
+def _partitioned_core(keys: jax.Array, vals: jax.Array,
+                      shape: Tuple[int, int], regime: str,
+                      vmem_budget_bytes: int, interpret: bool,
+                      cost_model: Optional[Dict[str, float]]) -> PaddedCOO:
+    """The ONE partitioned pipeline — plan/sort, step tables, Pallas launch,
+    canonical gather — over ``(B, cap)`` concatenated streams. Both the
+    single-collection regimes (B = 1) and :func:`spkadd_batched` run this
+    exact function, so the two paths cannot drift apart and the
+    bit-identity contract between them is structural, not tested-for."""
+    from repro.kernels import ops as kops  # kernels are optional deps
+
+    m, n = shape
+    cap = keys.shape[-1]
+    geom = kops.partitioned_launch_geometry(
+        cap, m=m, n=n, vmem_budget_bytes=vmem_budget_bytes)
+
+    plan, keys_p, steps = jax.vmap(functools.partial(
+        plan_and_partition, shape=shape, part_elems=geom.part_elems,
+        chunk=geom.chunk))(keys)
+    vals_srt = jnp.take_along_axis(vals, plan.order, axis=-1)
+    vals_p = jnp.zeros(keys_p.shape, jnp.float32).at[:, :cap].set(
+        vals_srt.astype(jnp.float32))
+    fold = _partition_fold(regime, geom, vmem_budget_bytes, cost_model)
+    flat = kops.partitioned_accumulate_flat(
+        keys_p, vals_p, steps.chunk_id, steps.part_id, m=m, n=n,
+        part_elems=geom.part_elems, parts=geom.parts, chunk=geom.chunk,
+        fold=fold, interpret=interpret)
+
+    sent = sentinel_key(shape)
+    out_vals = jax.vmap(
+        lambda ok, p_nnz, b_flat: _canonical_gather(ok, p_nnz, b_flat, sent,
+                                                    vals.dtype)
+    )(plan.out_keys, plan.nnz, flat)
+    return PaddedCOO(keys=plan.out_keys, vals=out_vals, nnz=plan.nnz,
+                     shape=shape)
+
+
+def _run_partitioned(mats: Sequence[PaddedCOO], regime: str,
                      vmem_budget_bytes: int = 16 * 1024 * 1024,
                      interpret: bool = True,
                      cost_model: Optional[Dict[str, float]] = None
                      ) -> PaddedCOO:
-    """Sliding-SPA regime: the Pallas VMEM-tiled accumulator produces the
-    dense numeric phase; output layout is canonical."""
-    from repro.kernels import ops as kops  # kernels are optional deps
-
+    """One-pass partitioned regimes (``vec`` / ``blocked_spa``): one stable
+    sort (the canonical plan's, shared with the stream partition — see the
+    module docstring), then the I/O-optimal Pallas launch reads each input
+    chunk exactly once and the canonical gather reuses the same plan.
+    Runs the shared core as a B = 1 batch."""
     cat = concat(mats)
-    m, n = cat.shape
-    flat = kops.spa_accumulate_flat(cat.keys, cat.vals, m=m, n=n,
-                                    vmem_budget_bytes=vmem_budget_bytes,
-                                    interpret=interpret)
-    return _canonical_from_flat(cat, flat)
+    out = _partitioned_core(cat.keys[None], cat.vals[None], cat.shape,
+                            regime, vmem_budget_bytes, interpret, cost_model)
+    return PaddedCOO(keys=out.keys[0], vals=out.vals[0], nnz=out.nnz[0],
+                     shape=cat.shape)
+
+
+def _run_blocked_spa(mats: Sequence[PaddedCOO],
+                     cost_model: Optional[Dict[str, float]] = None,
+                     **kw) -> PaddedCOO:
+    """Sliding-SPA regime: the partitioned one-pass launch with the serial
+    fidelity fold; output layout is canonical."""
+    return _run_partitioned(mats, "blocked_spa", cost_model=cost_model, **kw)
 
 
 def _run_vec(mats: Sequence[PaddedCOO],
-             vmem_budget_bytes: int = 16 * 1024 * 1024,
-             interpret: bool = True,
-             cost_model: Optional[Dict[str, float]] = None) -> PaddedCOO:
-    """Vec regime: the lane-parallel sliding accumulator
-    (``kernels/vec_accum``) produces the dense numeric phase. The wrapper
-    pre-sorts the stream into the canonical plan order, so per-key sums are
-    bit-identical to every other regime (DESIGN.md §3.3/§4); the one-hot vs
-    sort-fold choice follows the cost model's tile-size boundary
-    (``cost_model`` overrides layer on top of the process-wide table, as in
-    :func:`select_algorithm`)."""
-    from repro.kernels import ops as kops  # kernels are optional deps
-
-    cm = default_cost_model()
-    if cost_model:
-        cm.update(cost_model)
-    cat = concat(mats)
-    m, n = cat.shape
-    flat = kops.vec_accumulate_flat(
-        cat.keys, cat.vals, m=m, n=n,
-        vmem_budget_bytes=vmem_budget_bytes,
-        onehot_max_block_elems=int(cm["vec_onehot_max_block_elems"]),
-        interpret=interpret)
-    return _canonical_from_flat(cat, flat)
+             cost_model: Optional[Dict[str, float]] = None,
+             **kw) -> PaddedCOO:
+    """Vec regime: the partitioned one-pass launch with the lane-parallel
+    folds (``kernels/vec_accum``); per-key sums are bit-identical to every
+    other regime (DESIGN.md §3.3/§4) because the stream is in canonical
+    plan order."""
+    return _run_partitioned(mats, "vec", cost_model=cost_model, **kw)
 
 
 def _run_tree(mats: Sequence[PaddedCOO],
@@ -420,35 +493,78 @@ def unstack_collection(batched: Sequence[PaddedCOO], b: int) -> List[PaddedCOO]:
             for a in batched]
 
 
+def batched_regime_signals(stacked_mats: Sequence[PaddedCOO]
+                           ) -> RegimeSignals:
+    """Regime signals for a stacked collection. ``regime_signals()`` can't
+    be used directly: ``.cap`` on a batched leaf reads the batch dim —
+    capacity is the trailing axis here."""
+    m, n = stacked_mats[0].shape
+    mn = m * n
+    total = float(sum(a.keys.shape[-1] for a in stacked_mats))
+    return RegimeSignals(k=len(stacked_mats), density=total / max(mn, 1),
+                         compression=estimate_compression(total, mn),
+                         accum_elems=mn)
+
+
+def explain_batched_dispatch(stacked_mats: Sequence[PaddedCOO], *,
+                             algorithm: str = "auto",
+                             cost_model: Optional[Dict[str, float]] = None
+                             ) -> Tuple[RegimeSignals, str, str]:
+    """(signals, requested, effective) for a batched run — the observable
+    twin of :func:`explain_dispatch`.
+
+    ``effective`` is the algorithm :func:`spkadd_batched` actually executes.
+    Since the batched partitioned launch, every canonical regime — including
+    ``vec``/``blocked_spa`` — runs natively, so requested == effective; the
+    field exists so any future downgrade is *reported*, never silent.
+    """
+    sig = batched_regime_signals(stacked_mats)
+    requested = (select_algorithm(sig, cost_model) if algorithm == "auto"
+                 else algorithm)
+    effective = requested
+    return sig, requested, effective
+
+
+def _run_partitioned_batched(stacked_mats: Sequence[PaddedCOO], regime: str,
+                             vmem_budget_bytes: int = 16 * 1024 * 1024,
+                             interpret: bool = True,
+                             cost_model: Optional[Dict[str, float]] = None
+                             ) -> PaddedCOO:
+    """Batched one-pass partitioned launch: B sorted streams, per-batch step
+    tables, ONE Pallas program with a leading batch grid dimension — the
+    shared :func:`_partitioned_core` pipeline at B > 1. The single stable
+    sort per call is preserved (one vmapped argsort)."""
+    keys = jnp.concatenate([a.keys for a in stacked_mats], axis=-1)  # (B, cap)
+    vals = jnp.concatenate([a.vals for a in stacked_mats], axis=-1)
+    return _partitioned_core(keys, vals, stacked_mats[0].shape, regime,
+                             vmem_budget_bytes, interpret, cost_model)
+
+
 def spkadd_batched(stacked_mats: Sequence[PaddedCOO], *,
                    algorithm: str = "auto",
                    cost_model: Optional[Dict[str, float]] = None) -> PaddedCOO:
-    """Add B independent collections in one XLA program (vmapped engine).
+    """Add B independent collections in one XLA program.
 
     ``stacked_mats`` is a batched collection as built by
     :func:`stack_collections`. Returns a batched PaddedCOO (leading batch
     dim on every leaf). The dispatch decision is made once for the whole
-    stack (all batches share shapes/capacities, hence regime signals); the
-    sliding-Pallas regime is not vmappable, so a ``blocked_spa`` selection
-    falls back to the dense-SPA path.
+    stack (all batches share shapes/capacities, hence regime signals) and
+    is observable via :func:`explain_batched_dispatch`. Pure-jnp regimes
+    are vmapped; a ``vec``/``blocked_spa`` selection runs the batched
+    partitioned Pallas launch (leading batch grid dimension) — no silent
+    ``spa`` downgrade, and the result is bit-identical to the
+    per-collection canonical output.
     """
-    if algorithm == "auto":
-        # can't use regime_signals() directly: .cap on a batched leaf reads
-        # the batch dim. Capacity is the trailing axis here.
-        m, n = stacked_mats[0].shape
-        mn = m * n
-        total = float(sum(a.keys.shape[-1] for a in stacked_mats))
-        sig = RegimeSignals(k=len(stacked_mats), density=total / max(mn, 1),
-                            compression=estimate_compression(total, mn),
-                            accum_elems=mn)
-        algorithm = select_algorithm(sig, cost_model)
-    if algorithm in ("blocked_spa", "vec"):
-        algorithm = "spa"  # pallas grid doesn't vmap; same canonical result
+    _, _, effective = explain_batched_dispatch(
+        stacked_mats, algorithm=algorithm, cost_model=cost_model)
+    if effective in ("blocked_spa", "vec"):
+        return _run_partitioned_batched(stacked_mats, effective,
+                                        cost_model=cost_model)
 
     def one(mats):
-        return _CANONICAL[algorithm](mats, cost_model=cost_model) \
-            if algorithm in _CANONICAL \
-            else _alg.spkadd(mats, algorithm=algorithm)
+        return _CANONICAL[effective](mats, cost_model=cost_model) \
+            if effective in _CANONICAL \
+            else _alg.spkadd(mats, algorithm=effective)
 
     return jax.vmap(one)(list(stacked_mats))
 

@@ -30,6 +30,30 @@ def next_pow2(x: int) -> int:
     return p
 
 
+#: Trace-time counter of stable key sorts issued through
+#: :func:`stable_argsort`. Observability for the engine's single-sort
+#: discipline: the one-pass partitioned regimes promise exactly one stable
+#: sort per ``spkadd_auto`` call (the canonical plan's argsort, shared with
+#: the stream partition), and tests assert the delta across a call.
+_SORT_CALLS = [0]
+
+
+def sort_calls() -> int:
+    """Number of :func:`stable_argsort` invocations so far (trace-time)."""
+    return _SORT_CALLS[0]
+
+
+def stable_argsort(keys: jax.Array, axis: int = -1) -> jax.Array:
+    """The *one* stable key sort every canonical path goes through.
+
+    Routing all key argsorts here keeps the sort-count observable
+    (:func:`sort_calls`): the partitioned one-pass regimes must issue
+    exactly one — the compress plan's — per engine call.
+    """
+    _SORT_CALLS[0] += 1
+    return jnp.argsort(keys, axis=axis, stable=True)
+
+
 def sentinel_key(shape: Tuple[int, int]) -> int:
     """Key strictly greater than any valid linearized (row, col)."""
     m, n = shape
@@ -155,7 +179,7 @@ def compress_plan(keys: jax.Array, shape: Tuple[int, int]) -> CompressPlan:
     key array (paper Alg. 6's symbolic phase, vectorized)."""
     cap = keys.shape[0]
     sent = sentinel_key(shape)
-    order = jnp.argsort(keys)
+    order = stable_argsort(keys)
     k_s = keys[order]
     valid = k_s != sent
     first = jnp.concatenate([jnp.ones((1,), bool), k_s[1:] != k_s[:-1]])
@@ -168,6 +192,108 @@ def compress_plan(keys: jax.Array, shape: Tuple[int, int]) -> CompressPlan:
     nnz = is_new.sum().astype(jnp.int32)
     return CompressPlan(order=order, gid=gid, is_new=is_new,
                         out_keys=out_keys, nnz=nnz)
+
+
+class PartitionSteps(NamedTuple):
+    """Flattened (chunk, part) schedule of the one-pass partitioned launch.
+
+    Step ``t`` of the sliding grid reads input chunk ``chunk_id[t]`` and
+    accumulates into part ``part_id[t]`` (``part_id[t] == parts`` marks a
+    padded no-op step). Both tables are non-decreasing — the stream is
+    sorted and parts are contiguous key ranges — so output-part revisits
+    are *consecutive* (the legal Pallas accumulation pattern) and an input
+    chunk is fetched only when ``chunk_id`` changes: total input loads =
+    number of distinct ``chunk_id`` runs = one per non-empty chunk.
+    """
+
+    chunk_id: jax.Array  # int32[max_steps] input chunk per grid step
+    part_id: jax.Array   # int32[max_steps] output part per step; == parts -> pad
+
+
+def partition_max_steps(num_chunks: int, parts: int) -> int:
+    """Static step-count bound: every chunk contributes >= 1 step, each
+    part transition inside a chunk and each empty part adds at most one."""
+    return num_chunks + parts
+
+
+def partition_steps(keys_sorted: jax.Array, *, mn: int, part_elems: int,
+                    parts: int, chunk: int) -> PartitionSteps:
+    """Build the (chunk, part) step schedule for a *sorted* padded stream.
+
+    ``keys_sorted`` is ascending with sentinels (``>= mn``) at the tail and
+    length a multiple of ``chunk``. Because parts are key-aligned
+    (``part = key // part_elems``), each part covers a contiguous element
+    range ``[lo_p, hi_p)`` found by binary search — no second sort. Empty
+    parts get one step that re-reads the previous step's chunk (no extra
+    load: the chunk index is unchanged) purely so their output tile is
+    visited and zero-initialized; padding steps repeat the last real chunk
+    with ``part_id = parts`` (masked in-kernel).
+    """
+    cap_pad = keys_sorted.shape[0]
+    num_chunks = cap_pad // chunk
+    max_steps = partition_max_steps(num_chunks, parts)
+    # first sentinel position == number of valid keys; bounds clipped there
+    # so a sentinel (== mn) landing inside the last part's key range when
+    # mn < parts*part_elems is never scheduled as payload
+    nvalid = jnp.searchsorted(keys_sorted, mn, side="left").astype(jnp.int32)
+    bounds = (jnp.arange(parts + 1, dtype=jnp.int32) * part_elems)
+    edges = jnp.minimum(
+        jnp.searchsorted(keys_sorted, bounds, side="left").astype(jnp.int32),
+        nvalid)
+    lo, hi = edges[:-1], edges[1:]
+    empty = hi <= lo
+    first_chunk = lo // chunk
+    last_chunk = jnp.where(empty, 0, jnp.maximum(hi - 1, 0) // chunk)
+    prev_chunk = jnp.where(lo > 0, (lo - 1) // chunk, 0)
+    nsteps = jnp.where(empty, 1, last_chunk - first_chunk + 1)
+    off = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                           jnp.cumsum(nsteps).astype(jnp.int32)])
+    t = jnp.arange(max_steps, dtype=jnp.int32)
+    # part of step t: last offset <= t (searchsorted right on the offsets);
+    # t >= total naturally yields `parts`, the padding marker
+    p_of = (jnp.searchsorted(off, t, side="right") - 1).astype(jnp.int32)
+    p_clip = jnp.clip(p_of, 0, parts - 1)
+    j = t - off[p_clip]
+    c_of = jnp.where(empty[p_clip], prev_chunk[p_clip],
+                     first_chunk[p_clip] + j)
+    last_real = jnp.where(empty[parts - 1], prev_chunk[parts - 1],
+                          last_chunk[parts - 1])
+    pad = p_of >= parts
+    return PartitionSteps(
+        chunk_id=jnp.where(pad, last_real, c_of).astype(jnp.int32),
+        part_id=jnp.where(pad, parts, p_of).astype(jnp.int32))
+
+
+def plan_and_partition(keys: jax.Array, shape: Tuple[int, int], *,
+                       part_elems: int, chunk: int
+                       ) -> Tuple[CompressPlan, jax.Array, PartitionSteps]:
+    """ONE stable sort shared by the canonical plan and the stream partition.
+
+    The partition is key-aligned (``part = key // part_elems``), so the
+    composite partition key ``part * (m*n) + key`` is monotone in ``key``:
+    sorting by plain key simultaneously (a) yields the canonical
+    ``compress_plan`` layout and (b) groups the stream by part with keys
+    sorted inside each part — the property the one-pass partitioned launch
+    needs. A row-partitioned grid (``part = row // block_rows``) would
+    interleave parts in key order and force a second sort to recover the
+    canonical layout; aligning parts with the CSC linearization is what
+    makes the single-sort discipline possible.
+
+    Returns ``(plan, keys_sorted_padded, steps)``: the canonical plan (its
+    ``order`` re-sorts the values), the sorted key stream padded to a chunk
+    multiple with sentinels, and the per-step partition schedule.
+    """
+    m, n = shape
+    cap = keys.shape[0]
+    plan = compress_plan(keys, shape)
+    cap_pad = ((max(cap, 1) + chunk - 1) // chunk) * chunk
+    sent = sentinel_key(shape)
+    keys_p = jnp.full((cap_pad,), sent, jnp.int32).at[:cap].set(
+        keys[plan.order].astype(jnp.int32))
+    parts = (m * n + part_elems - 1) // part_elems
+    steps = partition_steps(keys_p, mn=m * n, part_elems=part_elems,
+                            parts=max(parts, 1), chunk=chunk)
+    return plan, keys_p, steps
 
 
 def compress(a: PaddedCOO) -> PaddedCOO:

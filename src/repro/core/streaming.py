@@ -15,10 +15,14 @@ stream length.
 Additions go through the regime engine (``spkadd_run``; default
 ``algorithm="auto"`` dispatches per the paper's Fig. 2 regions), and with
 ``window_batch > 1`` the accumulator buffers several windows and reduces
-them with **one** vmapped engine program (``spkadd_batched_ragged`` —
+them with **one** batched engine program (``spkadd_batched_ragged`` —
 capacities may differ across windows) before a single k-way merge into the
 running sum, instead of the old per-window Python loop of separate XLA
-programs.
+programs. Since the batched partitioned launch, a ``vec``/``blocked_spa``
+dispatch keeps these flushes on the one-pass Pallas path (lane-parallel
+in-tile folds, each input chunk read once) instead of silently downgrading
+to the dense scatter — ``engine.explain_batched_dispatch`` reports the
+effective pick.
 
 Use cases mirrored from the paper: streaming graph-snapshot accumulation,
 mini-batched sparse gradient aggregation.

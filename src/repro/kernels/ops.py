@@ -7,11 +7,13 @@ calling convention, so callers never see kernel launch geometry.
 from __future__ import annotations
 
 import functools
+import typing as _t
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.sparse import next_pow2 as _next_pow2
+from repro.core.sparse import stable_argsort as _stable_argsort
 from repro.kernels import hash_accum as _hash
 from repro.kernels import spa_accum as _spa
 from repro.kernels import vec_accum as _vec
@@ -21,14 +23,24 @@ def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
 
 
+def _round_down(x: int, mult: int) -> int:
+    return (x // mult) * mult
+
+
 def choose_block_rows(m: int, n: int, vmem_budget_bytes: int,
                       dtype_bytes: int = 4, lane_mult: int = 8) -> int:
     """Paper Alg. 7 line 3, with M := VMEM: parts = ceil(rows·n·b / M);
-    block_rows = ceil(m / parts), rounded to the sublane multiple."""
+    block_rows = the largest sublane multiple that *fits the budget*
+    (floored at ``lane_mult`` — the hardware minimum tile, the one case
+    allowed to exceed a sub-minimal budget).
+
+    Rounding is **down**: rounding the block up to the lane multiple could
+    exceed ``budget_rows`` and overflow VMEM on real hardware (regression:
+    a 9-row budget used to produce a 16-row tile).
+    """
     budget_rows = max(1, vmem_budget_bytes // max(1, n * dtype_bytes))
-    block = min(m, budget_rows)
-    return max(lane_mult, _round_up(block, lane_mult) if block >= lane_mult
-               else lane_mult)
+    block = min(_round_up(m, lane_mult), budget_rows)
+    return max(lane_mult, _round_down(block, lane_mult))
 
 
 @functools.partial(jax.jit, static_argnames=("m", "n", "block_rows",
@@ -126,7 +138,7 @@ def vec_accumulate(keys: jax.Array, vals: jax.Array, *, m: int, n: int,
     valid = keys < m * n
     keys_c = jnp.where(valid, keys, sent).astype(jnp.int32)
     vals_c = jnp.where(valid, vals.astype(jnp.float32), 0.0)
-    order = jnp.argsort(keys_c, stable=True)
+    order = _stable_argsort(keys_c)
     keys_s = keys_c[order]
     vals_s = vals_c[order]
 
@@ -172,6 +184,95 @@ def vec_store_counts(keys, *, m: int, n: int,
         vmem_budget_bytes=vmem_budget_bytes, chunk=chunk)
     return _vec.chunk_store_counts(keys, m=m, n=n, block_rows=block_rows,
                                    chunk=chunk)
+
+
+# ---------------------------------------------------------------------------
+# one-pass stream-partitioned launch (kernels/partition.py)
+# ---------------------------------------------------------------------------
+
+class PartitionGeometry(_t.NamedTuple):
+    """Static launch geometry of the one-pass partitioned grid — the single
+    source of truth shared by :func:`partitioned_accumulate_flat`, the
+    engine, and the I/O oracle (``benchmarks/spkadd_io.py``), so the oracle
+    can never drift from the kernel."""
+
+    part_elems: int  # flat accumulator tile size (f32 elements)
+    parts: int       # number of tiles covering m*n
+    chunk: int       # input chunk length (power of two)
+    num_chunks: int  # padded stream length / chunk
+    max_steps: int   # static bound on (chunk, part) grid steps
+
+
+def partitioned_launch_geometry(cap: int, *, m: int, n: int,
+                                part_elems: int | None = None,
+                                vmem_budget_bytes: int = 16 * 1024 * 1024,
+                                chunk: int | None = None) -> PartitionGeometry:
+    """Geometry the partitioned launch uses for a ``cap``-long stream.
+
+    The whole launch working set is budgeted, not just the tile: the
+    double-buffered input blocks (two in-flight ``(chunk,)`` key/value
+    pairs, 8 bytes per element) get at most half of
+    ``vmem_budget_bytes`` — ``chunk`` halves (staying a power of two,
+    floored at 8) until they fit — and ``part_elems`` is the largest lane
+    multiple whose f32 tile fits the remainder, rounded **down** and
+    floored at the lane multiple (same discipline as
+    :func:`choose_block_rows`; the two floors are the only sanctioned
+    excess, for sub-minimal budgets), then clipped to the accumulator
+    size. Parts are key-aligned ranges, which is what lets the canonical
+    sort double as the partition sort (``sparse.plan_and_partition``).
+    Explicit ``chunk``/``part_elems`` overrides are taken as-is.
+    """
+    from repro.kernels import partition as _part
+
+    mn = m * n
+    if chunk is None:
+        chunk = min(_spa.DEFAULT_CHUNK, _next_pow2(max(cap, 8)))
+        while chunk > 8 and 2 * chunk * 8 > vmem_budget_bytes // 2:
+            chunk //= 2  # input double-buffers get at most half the budget
+    if part_elems is None:
+        input_bytes = 2 * chunk * 8  # double-buffered int32 keys + f32 vals
+        budget_elems = max(1, (vmem_budget_bytes - input_bytes) // 4)
+        part_elems = max(_part.LANE_MULT,
+                         _round_down(budget_elems, _part.LANE_MULT))
+        part_elems = min(part_elems, _round_up(mn, _part.LANE_MULT))
+    parts = max(1, (mn + part_elems - 1) // part_elems)
+    cap_pad = _round_up(max(cap, 1), chunk)
+    num_chunks = cap_pad // chunk
+    return PartitionGeometry(part_elems=part_elems, parts=parts, chunk=chunk,
+                             num_chunks=num_chunks,
+                             max_steps=num_chunks + parts)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n", "part_elems", "parts",
+                                             "chunk", "fold", "interpret"))
+def partitioned_accumulate_flat(keys_sorted: jax.Array, vals_sorted: jax.Array,
+                                chunk_id: jax.Array, part_id: jax.Array, *,
+                                m: int, n: int, part_elems: int, parts: int,
+                                chunk: int, fold: str = "sort",
+                                interpret: bool = True) -> jax.Array:
+    """One-pass partitioned accumulate -> flat f32 in key order (col-major),
+    so ``flat[..., key]`` is the accumulated value of ``key``.
+
+    Unlike :func:`vec_accumulate_flat` this wrapper does **not** sort: it
+    takes the canonically sorted, sentinel-padded stream and the step
+    tables straight from ``sparse.plan_and_partition`` — the engine's one
+    stable sort is shared, not repeated. Accepts ``(cap_pad,)`` streams or
+    ``(B, cap_pad)`` batched stacks (with ``(B, max_steps)`` tables); the
+    batch dimension becomes the leading grid dimension of one launch.
+    """
+    from repro.kernels import partition as _part
+
+    squeeze = keys_sorted.ndim == 1
+    if squeeze:
+        keys_sorted = keys_sorted[None]
+        vals_sorted = vals_sorted[None]
+        chunk_id = chunk_id[None]
+        part_id = part_id[None]
+    flat = _part.partitioned_accumulate_raw(
+        keys_sorted.astype(jnp.int32), vals_sorted.astype(jnp.float32),
+        chunk_id, part_id, mn=m * n, part_elems=part_elems, parts=parts,
+        chunk=chunk, fold=fold, interpret=interpret)[:, :m * n]
+    return flat[0] if squeeze else flat
 
 
 @functools.partial(jax.jit, static_argnames=("sent", "table_size", "interpret"))

@@ -1,0 +1,183 @@
+"""One-pass stream-partitioned sliding accumulation — the I/O-optimal grid.
+
+The paper's headline result (Tables I/II) is that hash/sliding-hash SpKAdd
+meets the lower bounds on *both* computation and I/O. The legacy sliding
+grid (:mod:`repro.kernels.spa_accum`) meets the computation bound but not
+the I/O bound: its ``(parts, num_chunks)`` launch re-reads the whole
+concatenated stream once per part — ``parts × N`` input traffic. This
+module restores the one-pass discipline of the paper's Alg. 8:
+
+1. **One shared sort.** The accumulator is partitioned into key-aligned
+   ranges (``part = key // part_elems``), so the composite partition key
+   ``part * (m*n) + key`` is monotone in ``key`` and the canonical
+   ``compress_plan`` argsort doubles as the partition sort
+   (:func:`repro.core.sparse.plan_and_partition`). The `vec` regime's old
+   duplicate sort (plan + in-wrapper pre-sort) collapses to one.
+
+2. **CSR-style step schedule.** Binary search over the sorted stream yields
+   per-part element ranges; these flatten into per-step ``(chunk, part)``
+   tables (:func:`repro.core.sparse.partition_steps`) fed to the kernel via
+   scalar prefetch, so the grid's index maps become data-dependent.
+
+3. **One-touch launch.** The grid is ``(B, max_steps)``; step ``t`` reads
+   input chunk ``chunk_id[b, t]`` and accumulates into the VMEM-resident
+   tile of part ``part_id[b, t]``. Both tables are non-decreasing, so
+   output-tile revisits are *consecutive* (the legal Pallas accumulation
+   pattern: the tile stays resident until the part changes) and an input
+   chunk is DMA'd only when ``chunk_id`` changes — **total input loads =
+   number of non-empty chunks**, not ``parts × num_chunks``.
+   :func:`modeled_chunk_loads` is the host-side oracle for that claim
+   (``benchmarks/spkadd_io.py`` emits it as ``BENCH_spkadd_io.json``).
+
+The leading batch grid dimension makes the launch batchable: B independent
+sorted streams with per-batch step tables run in one ``pallas_call``, which
+is what lets ``engine.spkadd_batched`` keep a `vec` selection on the Pallas
+path instead of silently downgrading to the dense-SPA scatter.
+
+In-tile folds are shared with the legacy grid (``vec_accum.FOLD_FNS``:
+``serial`` / ``sort`` / ``onehot``); tiles are flat ``(1, part_elems)``
+slices of the col-major dense accumulator, so the kernel's output *is* the
+flat key-ordered array the engine's canonical gather consumes — no
+transpose epilogue. Bit-identity with the canonical contract holds because
+the stream is in stable key order: each key's duplicates are contiguous, in
+stream order, and span only consecutive steps of one part (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import vec_accum as _vec
+
+
+#: Sublane/lane multiple for flat f32 accumulator tiles.
+LANE_MULT = 128
+
+
+def _partitioned_kernel(chunk_ref, part_ref, keys_ref, vals_ref, out_ref, *,
+                        mn: int, part_elems: int, parts: int, fold: str):
+    """Grid step (b, t): fold chunk ``chunk_id[b, t]`` into the tile of part
+    ``part_id[b, t]``. The tile is zeroed when the (batch, part) block first
+    becomes resident; masked elements (other parts' keys in a boundary
+    chunk, sentinels, padded steps) contribute nothing."""
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+    p_raw = part_ref[b, t]
+    p = jnp.minimum(p_raw, parts - 1)
+    prev = jnp.minimum(part_ref[b, jnp.maximum(t, 1) - 1], parts - 1)
+
+    @pl.when(jnp.logical_or(t == 0, prev != p))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys = keys_ref[0]
+    vals = vals_ref[0]
+    lo = p * part_elems
+    valid = ((keys >= lo) & (keys < lo + part_elems) & (keys < mn)
+             & (p_raw < parts))
+    slot = jnp.where(valid, keys - lo, part_elems)
+    _vec.apply_fold(fold, slot, vals, valid, out_ref, n_cols=part_elems)
+
+
+def partitioned_accumulate_raw(keys: jax.Array, vals: jax.Array,
+                               chunk_id: jax.Array, part_id: jax.Array, *,
+                               mn: int, part_elems: int, parts: int,
+                               chunk: int, fold: str = "sort",
+                               interpret: bool = True) -> jax.Array:
+    """One-pass partitioned scatter-accumulate -> flat ``(B, parts*part_elems)``.
+
+    ``keys``/``vals`` are ``(B, cap_pad)`` **sorted** streams (ascending,
+    sentinel-padded to a chunk multiple); ``chunk_id``/``part_id`` are the
+    ``(B, max_steps)`` step tables from ``sparse.partition_steps``. The
+    result's leading ``mn`` elements per batch are the col-major dense
+    accumulator in key order (``flat[b, key]`` = accumulated value).
+    """
+    assert keys.ndim == 2 and keys.shape == vals.shape
+    assert chunk_id.shape == part_id.shape and chunk_id.shape[0] == keys.shape[0]
+    assert keys.shape[1] % chunk == 0, "pad streams to a chunk multiple"
+    assert fold in _vec.FOLDS, f"unknown fold {fold!r}; one of {_vec.FOLDS}"
+    if fold != "serial":
+        assert chunk & (chunk - 1) == 0, \
+            "vectorized folds need a power-of-two chunk (bitonic network)"
+    B, cap_pad = keys.shape
+    max_steps = chunk_id.shape[1]
+
+    kernel = functools.partial(_partitioned_kernel, mn=mn,
+                               part_elems=part_elems, parts=parts, fold=fold)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, max_steps),
+        in_specs=[
+            pl.BlockSpec((1, chunk), lambda b, t, c_ref, p_ref: (b, c_ref[b, t])),
+            pl.BlockSpec((1, chunk), lambda b, t, c_ref, p_ref: (b, c_ref[b, t])),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, part_elems),
+            lambda b, t, c_ref, p_ref: (
+                b * parts + jnp.minimum(p_ref[b, t], parts - 1), 0)),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * parts, part_elems), jnp.float32),
+        interpret=interpret,
+    )(chunk_id, part_id, keys, vals)
+    return out.reshape(B, parts * part_elems)
+
+
+# ---------------------------------------------------------------------------
+# host-side I/O oracle (benchmark observability)
+# ---------------------------------------------------------------------------
+
+def modeled_chunk_loads(keys, *, mn: int, part_elems: int, parts: int,
+                        chunk: int) -> dict:
+    """Modeled input-chunk loads for a stream at a given launch geometry.
+
+    The one-pass count is derived from the **actual step tables the kernel
+    launches with** (``sparse.partition_steps`` on the sorted padded
+    stream), not a reimplementation — a chunk is loaded when ``chunk_id``
+    differs from the previous step's (the Pallas pipelining rule: an
+    unchanged input block index is not re-fetched), so this oracle cannot
+    drift from the schedule it claims to model.
+
+    Returns per-strategy load counts:
+    ``onepass``           the partitioned grid (this module);
+    ``legacy_all_pairs``  the all-pairs re-reading pattern at THIS
+                          partition geometry (``parts × num_chunks``) —
+                          the counterfactual, distinct from the actual
+                          row-tiled legacy kernel's own geometry, which
+                          ``benchmarks/spkadd_io.py`` models separately;
+    ``lower_bound``       the paper's I/O bound at this geometry — each
+                          non-empty chunk read once (empty = the
+                          all-sentinel tail).
+    """
+    from repro.core.sparse import partition_steps
+
+    keys = np.asarray(keys)
+    cap = len(keys)
+    cap_pad = ((max(cap, 1) + chunk - 1) // chunk) * chunk
+    num_chunks = cap_pad // chunk
+    keys_p = np.full(cap_pad, mn, dtype=np.int32)
+    keys_p[:cap] = np.minimum(keys, mn)
+    keys_s = np.sort(keys_p, kind="stable")
+    nvalid = int(np.searchsorted(keys_s, mn, side="left"))
+    nonempty_chunks = max(1, -(-nvalid // chunk)) if nvalid else 1
+
+    steps = partition_steps(jnp.asarray(keys_s), mn=mn,
+                            part_elems=part_elems, parts=parts, chunk=chunk)
+    chunk_id = np.asarray(steps.chunk_id)
+    part_id = np.asarray(steps.part_id)
+    loads = 1 + int((np.diff(chunk_id) != 0).sum())
+    return {
+        "onepass": loads,
+        "legacy_all_pairs": parts * num_chunks,
+        "lower_bound": nonempty_chunks,
+        "num_chunks": num_chunks,
+        "parts": parts,
+        "steps": int((part_id < parts).sum()),
+    }

@@ -1,5 +1,15 @@
 """Sliding blocked-SPA accumulation kernel — TPU adaptation of sliding hash.
 
+**This is the legacy all-pairs grid.** Its ``(parts, num_chunks)`` launch
+re-reads the entire concatenated stream once per row-part (the input index
+map ignores the part index), so input traffic is ``parts × N`` — it
+violates the paper's I/O lower bound whenever ``parts > 1``. The
+production path is the one-pass stream-partitioned grid in
+:mod:`repro.kernels.partition`, which reads each input chunk exactly once;
+this module is kept as the fidelity baseline, for unsorted streams (the
+partitioned grid requires a part-grouped stream), and for the oracle
+comparisons in ``tests/test_vec_accum.py``.
+
 Paper (Alg. 7/8): when the accumulator exceeds the last-level cache M, split
 the row space into ``parts = ceil(bytes/M)`` and slide the table. Here the
 fast memory is VMEM: the grid's first dimension slides a dense
@@ -8,7 +18,7 @@ dimension streams chunks of the concatenated (key, val) input through VMEM.
 The output tile stays VMEM-resident across the whole chunk sweep (the output
 index map is constant in the chunk dimension — the standard Pallas
 accumulation pattern), so every random accumulator access is a VMEM hit:
-exactly the paper's cache discipline with M := VMEM.
+the paper's cache discipline with M := VMEM, minus its I/O discipline.
 
 Keys are CSC-linearized (``key = col*m + row``); the sentinel ``m*n`` (or
 anything >= m*n) marks padding and is dropped in-kernel.
@@ -59,25 +69,9 @@ def _spa_kernel(keys_ref, vals_ref, out_ref, *, m: int, n: int,
     rows = keys % m
     cols = keys // m
     valid = (keys < m * n) & (rows >= row_lo) & (rows < row_lo + block_rows)
-
-    if fold == "serial":
-        rows_local = jnp.where(valid, rows - row_lo, 0)
-        cols_local = jnp.where(valid, cols, 0)
-        vals_masked = jnp.where(valid, vals, 0.0)
-
-        def body(e, _):
-            r = rows_local[e]
-            cc = cols_local[e]
-            cur = pl.load(out_ref, (r, cc))
-            pl.store(out_ref, (r, cc), cur + vals_masked[e])
-            return 0
-
-        jax.lax.fori_loop(0, chunk, body, 0)
-    else:
-        # local row-major slot into the (block_rows, n) tile
-        slot = jnp.where(valid, (rows - row_lo) * n + cols, block_rows * n)
-        tile_fold = _vec.sort_fold if fold == "sort" else _vec.onehot_fold
-        tile_fold(slot, vals, valid, out_ref, n_cols=n)
+    # local row-major slot into the (block_rows, n) tile
+    slot = jnp.where(valid, (rows - row_lo) * n + cols, block_rows * n)
+    _vec.apply_fold(fold, slot, vals, valid, out_ref, n_cols=n)
 
 
 def spa_accumulate_raw(keys: jax.Array, vals: jax.Array, *, m: int, n: int,

@@ -195,8 +195,32 @@ def _sorted_run_totals(slot: jax.Array, vals: jax.Array, valid: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# the two in-tile folds (called from the sliding grid in spa_accum.py)
+# the in-tile folds (called from the sliding grids in spa_accum.py and
+# partition.py; `slot` is the tile-local flat offset, `block_elems` marks
+# masked elements)
 # ---------------------------------------------------------------------------
+
+def serial_fold(slot: jax.Array, vals: jax.Array, valid: jax.Array,
+                out_ref, *, n_cols: int) -> None:
+    """The original fidelity baseline: one dynamic store per input element
+    (O(chunk) dependent round-trips through the store unit). Masked
+    elements add an exact ``+0.0`` at tile slot 0, matching the reference
+    oracle's discard convention."""
+    from jax.experimental import pallas as pl
+
+    slot_safe = jnp.where(valid, slot, 0)
+    vals_m = jnp.where(valid, vals, 0.0).astype(jnp.float32)
+    chunk = slot.shape[0]
+
+    def body(e, _):
+        s = slot_safe[e]
+        r, c = s // n_cols, s % n_cols
+        cur = pl.load(out_ref, (r, c))
+        pl.store(out_ref, (r, c), cur + vals_m[e])
+        return 0
+
+    jax.lax.fori_loop(0, chunk, body, 0)
+
 
 def sort_fold(slot: jax.Array, vals: jax.Array, valid: jax.Array,
               out_ref, *, n_cols: int) -> None:
@@ -250,8 +274,18 @@ def onehot_fold(slot: jax.Array, vals: jax.Array, valid: jax.Array,
     out_ref[...] = new_flat.reshape(block_rows, out_ref.shape[1])
 
 
-#: fold-mode registry the sliding grid dispatches on (static, per launch).
+#: fold-mode registry the sliding grids dispatch on (static, per launch).
 FOLDS = ("serial", "sort", "onehot")
+
+#: fold name -> in-tile fold fn, shared by the legacy row-tiled grid
+#: (spa_accum.py) and the one-pass partitioned grid (partition.py).
+FOLD_FNS = {"serial": serial_fold, "sort": sort_fold, "onehot": onehot_fold}
+
+
+def apply_fold(fold: str, slot: jax.Array, vals: jax.Array,
+               valid: jax.Array, out_ref, *, n_cols: int) -> None:
+    """Dispatch the in-tile fold by (static) name."""
+    FOLD_FNS[fold](slot, vals, valid, out_ref, n_cols=n_cols)
 
 
 # ---------------------------------------------------------------------------

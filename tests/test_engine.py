@@ -308,13 +308,16 @@ def test_batched_under_jit_one_program():
 
 
 @pytest.mark.parametrize("algorithm", ["blocked_spa", "vec"])
-def test_batched_pallas_regimes_fall_back_vmappable(algorithm):
-    """A Pallas-regime selection (vec/blocked_spa) must not crash the
-    vmapped path — it falls back to the dense-SPA scatter, which is
-    canonical-identical."""
+def test_batched_pallas_regimes_run_natively(algorithm):
+    """A Pallas-regime selection (vec/blocked_spa) runs the batched
+    partitioned launch — reported effective algorithm unchanged (no silent
+    spa downgrade) and canonical-identical per batch."""
     B, k = 2, 8
     colls = [random_collection(300 + b, k, 32, 8, 30)[0] for b in range(B)]
     stacked = E.stack_collections(colls)
+    _, requested, effective = E.explain_batched_dispatch(
+        stacked, algorithm=algorithm)
+    assert (requested, effective) == (algorithm, algorithm)
     out = E.spkadd_batched(stacked, algorithm=algorithm)
     for b in range(B):
         want = spkadd(colls[b], algorithm="sorted")
