@@ -64,7 +64,16 @@ def time_fn(fn, *args, warmup=1, iters=5):
 
 #: Records accumulated by every ``emit`` call in this process, dumped by
 #: ``write_json`` — the machine-readable twin of the CSV lines on stdout.
+#: ``write_json`` drains it (see :func:`reset_records`), so back-to-back
+#: benchmark invocations in one process cannot cross-contaminate artifacts
+#: (and, downstream, perf-ledger entries).
 RECORDS: list[dict] = []
+
+
+def reset_records() -> None:
+    """Empty the ``RECORDS`` accumulator (in place — importers that did
+    ``from benchmarks.common import RECORDS`` see the reset too)."""
+    RECORDS.clear()
 
 
 def emit(name: str, us: float, derived: str = ""):
@@ -93,7 +102,14 @@ def parse_emit_lines(text: str) -> list[dict]:
 def write_json(path: str, records: list[dict] | None = None, **meta):
     """Dump records (default: this process's ``RECORDS``) plus provenance
     metadata as the ``BENCH_*.json`` artifact schema:
-    ``{"meta": {...}, "records": [{"name", "value", "derived"}, ...]}``."""
+    ``{"meta": {...}, "records": [{"name", "value", "derived"}, ...]}``.
+
+    Creates the output directory if missing, and **resets** the ``RECORDS``
+    accumulator afterwards: each artifact owns exactly the records emitted
+    since the previous ``write_json``, so one process running several
+    benchmarks back-to-back (``scripts/perf_fleet.py``) appends disjoint
+    ledger entries instead of cross-contaminated supersets.
+    """
     payload = {
         "meta": {
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
@@ -102,9 +118,10 @@ def write_json(path: str, records: list[dict] | None = None, **meta):
             "python": platform.python_version(),
             **meta,
         },
-        "records": RECORDS if records is None else records,
+        "records": list(RECORDS) if records is None else records,
     }
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
+    reset_records()
     print(f"wrote {len(payload['records'])} records to {path}", flush=True)

@@ -1,0 +1,91 @@
+#!/usr/bin/env python
+"""Render the perf-history ledger as a trajectory, and/or run the
+regression gate.
+
+Usage:
+    python scripts/bench_report.py                    # full trajectory
+    python scripts/bench_report.py --tracked          # tracked oracles only
+    python scripts/bench_report.py --gate             # exit 1 on regression
+    python scripts/bench_report.py --history results/history --last 8
+
+Output, per series (same backend/suite/geometry/record name): the value at
+each commit in trajectory order, the rolling baseline of the prior points,
+and the delta of the newest point against it. Tracked-oracle series (the
+regression-gated families — see ``obs.ledger.TRACKED_ORACLES``) are marked
+with ``*``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import statistics
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.obs import ledger  # noqa: E402  (zero-dependency module)
+
+
+def render(entries, *, last: int = 10, tracked_only: bool = False,
+           window: int = 5) -> int:
+    series = ledger.series(entries)
+    if not series:
+        print("ledger is empty — run scripts/perf_fleet.py first")
+        return 0
+    commits = []
+    for e in entries:  # trajectory order, deduped
+        c = e["key"]["commit"]
+        if c not in commits:
+            commits.append(c)
+    print(f"perf trajectory: {len(entries)} ledger entries, "
+          f"{len(series)} series, commits {' -> '.join(commits[-last:])}")
+    shown = 0
+    for (backend, suite, geometry, name), pts in sorted(series.items()):
+        is_tracked = bool(ledger.tracked_names([name]))
+        if tracked_only and not is_tracked:
+            continue
+        mark = "*" if is_tracked else " "
+        vals = [v for _, v in pts][-last:]
+        trail = " ".join(f"{v:g}" for v in vals)
+        if len(pts) >= 2:
+            baseline = statistics.median(v for _, v in pts[:-1][-window:])
+            latest = pts[-1][1]
+            delta = (latest - baseline) / baseline if baseline else 0.0
+            verdict = f"baseline {baseline:g} ({delta:+.1%})"
+        else:
+            verdict = "baseline seeded"
+        geo = f" geom={geometry}" if geometry else ""
+        print(f" {mark} [{backend}/{suite}]{geo} {name}: {trail}  {verdict}")
+        shown += 1
+    print(f"{shown} series shown" + (" (tracked only)" if tracked_only
+                                     else ""))
+    return shown
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--history", default=os.path.join("results", "history"))
+    ap.add_argument("--last", type=int, default=10,
+                    help="trajectory points shown per series")
+    ap.add_argument("--tracked", action="store_true",
+                    help="only the regression-gated oracle series")
+    ap.add_argument("--gate", action="store_true",
+                    help="run the regression gate; exit 1 on any regression")
+    ap.add_argument("--tolerance", type=float, default=0.05)
+    args = ap.parse_args()
+
+    entries = ledger.load(args.history)
+    render(entries, last=args.last, tracked_only=args.tracked)
+    if args.gate:
+        problems = ledger.check_regressions(entries, rel_tol=args.tolerance)
+        for p in problems:
+            print(p)
+        if problems:
+            return 1
+        print("regression gate: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,25 +16,12 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
 RESULTS_DIR="${RESULTS_DIR:-results}"
 
-# benchmark smoke: tiny-shape cross-regime consistency gate — every SpKAdd
-# algorithm (incl. the vec/blocked_spa/hash Pallas kernels) must agree, and
-# every engine-canonical regime must be bit-identical to the sorted
-# reference. Fails the build on any mismatch. Emits serial-store counts as
-# a machine-readable BENCH_*.json artifact (the perf trajectory CI uploads).
-PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.table34_algorithms --smoke \
-    --json "$RESULTS_DIR/BENCH_table34_smoke.json"
-
-# sparse-allreduce traffic model: dense vs top-k+SpKAdd collective bytes on
-# a 1-D (8) and 2-D (4x2) fake-device mesh, wall-timed, emitted as JSON.
-PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.sparse_allreduce_bytes --smoke \
-    --json "$RESULTS_DIR/BENCH_sparse_allreduce.json"
-
-# I/O oracle: the one-pass partitioned sliding grid must read each input
-# chunk exactly once (the paper's I/O lower bound) at the production launch
-# geometry, while the legacy all-pairs grid pays parts x. Fails the build
-# on any violation; emits the modeled load counts as JSON.
-PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.spkadd_io --smoke \
-    --json "$RESULTS_DIR/BENCH_spkadd_io.json"
+# Perf fleet: runs every benchmark smoke suite (table34 cross-regime gate,
+# sparse-allreduce traffic model, SpKAdd one-pass I/O oracle) with
+# observability on (SPKADD_OBS=1 -> trace_<suite>.jsonl span exports next
+# to the BENCH_*.json artifacts), folds the artifacts into the committed
+# results/history/ ledger, and fails the build if any tracked oracle
+# (chunk loads, serial stores, collective bytes) regresses beyond
+# tolerance vs the rolling baseline. `scripts/bench_report.py` renders
+# the resulting trajectory.
+python scripts/perf_fleet.py --results "$RESULTS_DIR"

@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""ReFrame-style perf fleet runner: execute the benchmark smoke matrix,
+collect ``BENCH_*.json`` artifacts, fold them into the committed
+``results/history/`` ledger, and gate on regression vs the rolling baseline.
+
+Usage:
+    python scripts/perf_fleet.py                  # run all suites + gate
+    python scripts/perf_fleet.py --only table34 spkadd_io
+    python scripts/perf_fleet.py --no-gate        # append history, skip gate
+    python scripts/perf_fleet.py --append-only results/BENCH_*.json
+                                                  # fold existing artifacts
+
+Each suite runs as a subprocess (its own jax init — the allreduce suite
+forks fake-device meshes) with observability on: ``SPKADD_OBS=1`` makes the
+engine/kernel/streaming spans record, and ``SPKADD_OBS_JSONL`` exports them
+to ``results/trace_<suite>.jsonl`` at exit — the trace artifact CI uploads.
+
+Exit status: nonzero when any suite's own smoke gate fails, or (unless
+``--no-gate``) when the regression gate trips. See
+``src/repro/obs/ledger.py`` for the ledger schema and the tracked-oracle
+patterns; ``scripts/bench_report.py`` renders the trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.obs import ledger  # noqa: E402  (zero-dependency module)
+
+#: suite name -> (module, artifact filename). The matrix every fleet run
+#: executes; new ``benchmarks/*.py --smoke`` suites register here.
+SUITES = {
+    "table34": ("benchmarks.table34_algorithms", "BENCH_table34_smoke.json"),
+    "sparse_allreduce": ("benchmarks.sparse_allreduce_bytes",
+                         "BENCH_sparse_allreduce.json"),
+    "spkadd_io": ("benchmarks.spkadd_io", "BENCH_spkadd_io.json"),
+}
+
+
+def run_suite(name: str, results_dir: str) -> tuple[int, str]:
+    """Run one smoke suite with observability on; returns (rc, artifact)."""
+    module, artifact = SUITES[name]
+    path = os.path.join(results_dir, artifact)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO, "src"), REPO, env.get("PYTHONPATH", "")])
+    env["SPKADD_OBS"] = "1"
+    env["SPKADD_OBS_JSONL"] = os.path.join(results_dir,
+                                           f"trace_{name}.jsonl")
+    cmd = [sys.executable, "-m", module, "--smoke", "--json", path]
+    print(f"[fleet] {name}: {' '.join(cmd)}", flush=True)
+    rc = subprocess.run(cmd, env=env, cwd=REPO).returncode
+    return rc, path
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None, choices=list(SUITES),
+                    help="subset of suites (default: all)")
+    ap.add_argument("--results", default=os.environ.get("RESULTS_DIR",
+                                                        "results"),
+                    help="artifact output dir")
+    ap.add_argument("--history", default=os.path.join("results", "history"),
+                    help="ledger dir (committed)")
+    ap.add_argument("--no-gate", action="store_true",
+                    help="append to history but skip the regression gate")
+    ap.add_argument("--tolerance", type=float, default=0.05,
+                    help="relative regression tolerance vs rolling baseline")
+    ap.add_argument("--append-only", nargs="*", default=None,
+                    metavar="BENCH_JSON",
+                    help="skip running suites; fold these existing "
+                         "artifacts (globs ok) into the ledger")
+    args = ap.parse_args()
+
+    os.makedirs(args.results, exist_ok=True)
+    failures = 0
+    artifacts: list[str] = []
+    if args.append_only is not None:
+        for pat in args.append_only:
+            artifacts.extend(sorted(glob.glob(pat)) or [pat])
+    else:
+        for name in (args.only or list(SUITES)):
+            rc, path = run_suite(name, args.results)
+            if rc != 0:
+                print(f"[fleet] suite {name} FAILED (rc={rc})", flush=True)
+                failures += 1
+            if os.path.exists(path):
+                artifacts.append(path)
+
+    commit = ledger.git_commit(REPO)
+    for path in artifacts:
+        entry = ledger.append_bench_file(args.history, path, commit=commit)
+        k = entry["key"]
+        print(f"[fleet] ledger += ({k['commit']}, {k['backend']}, "
+              f"{k['suite']}) [{len(entry['records'])} records]", flush=True)
+
+    if not args.no_gate:
+        problems = ledger.check_regressions(ledger.load(args.history),
+                                            rel_tol=args.tolerance)
+        for p in problems:
+            print(f"[fleet] {p}", flush=True)
+        if problems:
+            failures += len(problems)
+        else:
+            print("[fleet] regression gate: clean", flush=True)
+
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -37,6 +37,7 @@ WEIGHTS = {
     "test_layers.py": 3,
     "test_extensions.py": 3,
     "test_sharding.py": 2,
+    "test_obs.py": 2,
 }
 
 TESTS_DIR = os.path.join(

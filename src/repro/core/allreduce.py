@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.compat import axis_size as _axis_size
 from repro.core.engine import scatter_accumulate
 from repro.core.topk import SparseUpdate, densify
@@ -121,6 +122,23 @@ SCHEDULES: dict[str, Callable[[SparseUpdate, str], jax.Array]] = {
 }
 
 
+def modeled_schedule_bytes(schedule: str, p: int, s: int,
+                           entry_bytes: int = 8) -> int:
+    """Modeled per-worker collective payload of a schedule: ``p`` workers,
+    ``s``-entry streams, ``entry_bytes`` per (idx, val) pair (int32 + f32).
+
+    ``gather_kway`` receives all P streams (P·s); ``tree_2way`` exchanges
+    doubling widths over lg P rounds (s·(P−1) total); ``ring_2way`` forwards
+    an s-entry payload on each of the P−1 hops. The measured twin (lowered
+    HLO collective bytes) is ``benchmarks/sparse_allreduce_bytes.py``; this
+    static model is what the trace span / counters can record at every
+    launch without an HLO pass.
+    """
+    if schedule == "gather_kway":
+        return p * s * entry_bytes
+    return (p - 1) * s * entry_bytes  # tree_2way and ring_2way both sum to it
+
+
 def sparse_allreduce(u: SparseUpdate, axis: str,
                      schedule: str = "gather_kway",
                      accumulator: str = "scatter") -> jax.Array:
@@ -128,15 +146,28 @@ def sparse_allreduce(u: SparseUpdate, axis: str,
 
     ``accumulator`` selects the local k-way fold for the ``gather_kway``
     schedule ("scatter" | "vec"); the 2-way schedules ignore it.
+
+    Observability: each call (once per trace — this runs inside shard_map,
+    so the body is staged once for all shards) records an
+    ``allreduce.sparse`` span and bumps the per-schedule call counter and
+    the modeled traffic-bytes counter (:func:`modeled_schedule_bytes`).
     """
     try:
         fn = SCHEDULES[schedule]
     except KeyError:
         raise ValueError(f"unknown schedule {schedule!r}; "
                          f"choose from {sorted(SCHEDULES)}") from None
-    if schedule == "gather_kway":
-        return fn(u, axis, accumulator=accumulator)
-    return fn(u, axis)
+    p = _axis_size(axis)
+    s = int(u.idx.shape[0])
+    nbytes = modeled_schedule_bytes(schedule, p, s)
+    obs.counter(f"allreduce.calls.{schedule}").inc()
+    obs.counter("allreduce.modeled_bytes").inc(nbytes)
+    with obs.span("allreduce.sparse", schedule=schedule, axis=axis, p=p,
+                  stream_len=s, accumulator=accumulator,
+                  modeled_bytes=nbytes):
+        if schedule == "gather_kway":
+            return fn(u, axis, accumulator=accumulator)
+        return fn(u, axis)
 
 
 #: Leaves smaller than this fall back to dense psum — the sparse stream +

@@ -55,6 +55,7 @@ from __future__ import annotations
 
 import functools
 import json
+import logging
 import math
 import os
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
@@ -62,10 +63,13 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.sparse import (CompressPlan, PaddedCOO, compress_plan, concat,
                                next_pow2, plan_and_partition, sentinel_key,
                                with_capacity)
 from repro.core import spkadd as _alg
+
+_log = logging.getLogger("repro.engine")
 
 
 # ---------------------------------------------------------------------------
@@ -333,18 +337,23 @@ def _partitioned_core(keys: jax.Array, vals: jax.Array,
     cap = keys.shape[-1]
     geom = kops.partitioned_launch_geometry(
         cap, m=m, n=n, vmem_budget_bytes=vmem_budget_bytes)
-
-    plan, keys_p, steps = jax.vmap(functools.partial(
-        plan_and_partition, shape=shape, part_elems=geom.part_elems,
-        chunk=geom.chunk))(keys)
-    vals_srt = jnp.take_along_axis(vals, plan.order, axis=-1)
-    vals_p = jnp.zeros(keys_p.shape, jnp.float32).at[:, :cap].set(
-        vals_srt.astype(jnp.float32))
     fold = _partition_fold(regime, geom, vmem_budget_bytes, cost_model)
-    flat = kops.partitioned_accumulate_flat(
-        keys_p, vals_p, steps.chunk_id, steps.part_id, m=m, n=n,
-        part_elems=geom.part_elems, parts=geom.parts, chunk=geom.chunk,
-        fold=fold, interpret=interpret)
+    obs.counter("engine.partitioned.launches").inc()
+    obs.counter(f"engine.partitioned.fold.{fold}").inc()
+    with obs.span("engine.partitioned_launch", regime=regime, fold=fold,
+                  batch=keys.shape[0], cap=cap, parts=geom.parts,
+                  part_elems=geom.part_elems, chunk=geom.chunk,
+                  num_chunks=geom.num_chunks, max_steps=geom.max_steps):
+        plan, keys_p, steps = jax.vmap(functools.partial(
+            plan_and_partition, shape=shape, part_elems=geom.part_elems,
+            chunk=geom.chunk))(keys)
+        vals_srt = jnp.take_along_axis(vals, plan.order, axis=-1)
+        vals_p = jnp.zeros(keys_p.shape, jnp.float32).at[:, :cap].set(
+            vals_srt.astype(jnp.float32))
+        flat = kops.partitioned_accumulate_flat(
+            keys_p, vals_p, steps.chunk_id, steps.part_id, m=m, n=n,
+            part_elems=geom.part_elems, parts=geom.parts, chunk=geom.chunk,
+            fold=fold, interpret=interpret)
 
     sent = sentinel_key(shape)
     out_vals = jax.vmap(
@@ -436,7 +445,11 @@ def spkadd_auto(mats: Sequence[PaddedCOO], *,
     """
     sig = signals if signals is not None else regime_signals(mats)
     selected = select_algorithm(sig, cost_model)
-    return _CANONICAL[selected](mats, cost_model=cost_model)
+    obs.counter(f"engine.dispatch.{selected}").inc()
+    with obs.span("engine.spkadd_auto", selected=selected, k=sig.k,
+                  density=sig.density, compression=sig.compression,
+                  accum_elems=sig.accum_elems):
+        return _CANONICAL[selected](mats, cost_model=cost_model)
 
 
 def explain_dispatch(mats: Sequence[PaddedCOO], *,
@@ -516,12 +529,24 @@ def explain_batched_dispatch(stacked_mats: Sequence[PaddedCOO], *,
     ``effective`` is the algorithm :func:`spkadd_batched` actually executes.
     Since the batched partitioned launch, every canonical regime — including
     ``vec``/``blocked_spa`` — runs natively, so requested == effective; the
-    field exists so any future downgrade is *reported*, never silent.
+    field exists so any future downgrade is *reported*, never silent: the
+    decision is recorded as an ``engine.batched_dispatch`` trace span, and
+    an effective ≠ requested divergence additionally logs a one-line
+    warning and bumps ``engine.batched.downgrades``.
     """
     sig = batched_regime_signals(stacked_mats)
     requested = (select_algorithm(sig, cost_model) if algorithm == "auto"
                  else algorithm)
     effective = requested
+    with obs.span("engine.batched_dispatch", requested=requested,
+                  effective=effective, k=sig.k, density=sig.density,
+                  compression=sig.compression, accum_elems=sig.accum_elems,
+                  batch=int(stacked_mats[0].keys.shape[0])):
+        pass
+    if effective != requested:
+        obs.counter("engine.batched.downgrades").inc()
+        _log.warning("spkadd_batched: requested algorithm %r downgraded to "
+                     "%r (signals: %s)", requested, effective, sig)
     return sig, requested, effective
 
 
@@ -605,11 +630,17 @@ def spkadd_batched_ragged(collections: Sequence[Sequence[PaddedCOO]], *,
     distinct keys, extra sentinel slots).
     """
     results: List[Optional[PaddedCOO]] = [None] * len(collections)
-    for _, members in bucket_collections(collections).items():
-        idxs = [i for i, _ in members]
-        stacked = stack_collections([padded for _, padded in members])
-        out = spkadd_batched(stacked, algorithm=algorithm,
-                             cost_model=cost_model)
-        for b, i in enumerate(idxs):
-            results[i] = unstack_collection([out], b)[0]
+    buckets = bucket_collections(collections)
+    obs.counter("engine.ragged.calls").inc()
+    with obs.span("engine.spkadd_batched_ragged", algorithm=algorithm,
+                  collections=len(collections), buckets=len(buckets)):
+        for _, members in buckets.items():
+            obs.histogram("engine.ragged.bucket_occupancy").observe(
+                len(members))
+            idxs = [i for i, _ in members]
+            stacked = stack_collections([padded for _, padded in members])
+            out = spkadd_batched(stacked, algorithm=algorithm,
+                                 cost_model=cost_model)
+            for b, i in enumerate(idxs):
+                results[i] = unstack_collection([out], b)[0]
     return results

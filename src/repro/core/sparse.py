@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as _metrics
+
 
 def next_pow2(x: int) -> int:
     """Smallest power of two >= x (>= 1). Shared by capacity bucketing
@@ -31,16 +33,20 @@ def next_pow2(x: int) -> int:
 
 
 #: Trace-time counter of stable key sorts issued through
-#: :func:`stable_argsort`. Observability for the engine's single-sort
-#: discipline: the one-pass partitioned regimes promise exactly one stable
-#: sort per ``spkadd_auto`` call (the canonical plan's argsort, shared with
-#: the stream partition), and tests assert the delta across a call.
-_SORT_CALLS = [0]
+#: :func:`stable_argsort`, on the obs metrics registry (it survives
+#: ``obs.metrics.reset()`` — the handle stays registered). Observability
+#: for the engine's single-sort discipline: the one-pass partitioned
+#: regimes promise exactly one stable sort per ``spkadd_auto`` call (the
+#: canonical plan's argsort, shared with the stream partition), and tests
+#: assert the delta across a call.
+SORT_COUNTER_NAME = "sparse.stable_argsort.calls"
+_SORT_COUNTER = _metrics.counter(SORT_COUNTER_NAME)
 
 
 def sort_calls() -> int:
-    """Number of :func:`stable_argsort` invocations so far (trace-time)."""
-    return _SORT_CALLS[0]
+    """Number of :func:`stable_argsort` invocations so far (trace-time).
+    Back-compat alias for ``obs.counter("sparse.stable_argsort.calls")``."""
+    return _SORT_COUNTER.value
 
 
 def stable_argsort(keys: jax.Array, axis: int = -1) -> jax.Array:
@@ -50,7 +56,7 @@ def stable_argsort(keys: jax.Array, axis: int = -1) -> jax.Array:
     (:func:`sort_calls`): the partitioned one-pass regimes must issue
     exactly one — the compress plan's — per engine call.
     """
-    _SORT_CALLS[0] += 1
+    _SORT_COUNTER.inc()
     return jnp.argsort(keys, axis=axis, stable=True)
 
 

@@ -34,6 +34,7 @@ from typing import List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.engine import spkadd_batched_ragged, spkadd_run
 from repro.core.sparse import PaddedCOO, make_empty, sentinel_key
 
@@ -87,22 +88,31 @@ class StreamingAccumulator:
     def flush(self) -> None:
         if not self._buffer:
             return
-        if len(self._buffer) <= self.batch_k:
-            # single window: one k-way add folds buffer and running sum
-            combined = spkadd_run([self._sum] + self._buffer,
-                                  algorithm=self.algorithm)
-        else:
-            # several buffered windows: reduce them all in one vmapped
-            # engine program (ragged: window capacities may differ), then
-            # one k-way merge into the running sum
-            windows = [self._buffer[i:i + self.batch_k]
-                       for i in range(0, len(self._buffer), self.batch_k)]
-            sums = spkadd_batched_ragged(windows, algorithm=self.algorithm)
-            combined = spkadd_run([self._sum] + sums,
-                                  algorithm=self.algorithm)
-        # re-budget: keep the heaviest-by-|value| cap_budget entries (exact
-        # when the true nnz fits; a documented approximation when it does not)
-        self._sum = _truncate_by_magnitude(combined, self.cap_budget)
+        buffered = len(self._buffer)
+        windows_n = -(-buffered // self.batch_k)
+        obs.counter("streaming.flushes").inc()
+        obs.histogram("streaming.flush_size").observe(buffered)
+        with obs.span("streaming.flush", buffered=buffered,
+                      windows=windows_n, batch_k=self.batch_k,
+                      algorithm=self.algorithm, cap_budget=self.cap_budget):
+            if buffered <= self.batch_k:
+                # single window: one k-way add folds buffer and running sum
+                combined = spkadd_run([self._sum] + self._buffer,
+                                      algorithm=self.algorithm)
+            else:
+                # several buffered windows: reduce them all in one vmapped
+                # engine program (ragged: window capacities may differ), then
+                # one k-way merge into the running sum
+                windows = [self._buffer[i:i + self.batch_k]
+                           for i in range(0, len(self._buffer), self.batch_k)]
+                sums = spkadd_batched_ragged(windows,
+                                             algorithm=self.algorithm)
+                combined = spkadd_run([self._sum] + sums,
+                                      algorithm=self.algorithm)
+            # re-budget: keep the heaviest-by-|value| cap_budget entries
+            # (exact when the true nnz fits; a documented approximation when
+            # it does not)
+            self._sum = _truncate_by_magnitude(combined, self.cap_budget)
         self._buffer = []
         self.n_flushes += 1
 

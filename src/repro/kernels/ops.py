@@ -12,6 +12,7 @@ import typing as _t
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.sparse import next_pow2 as _next_pow2
 from repro.core.sparse import stable_argsort as _stable_argsort
 from repro.kernels import hash_accum as _hash
@@ -182,8 +183,12 @@ def vec_store_counts(keys, *, m: int, n: int,
     block_rows, chunk = vec_launch_geometry(
         len(keys), m=m, n=n, block_rows=block_rows,
         vmem_budget_bytes=vmem_budget_bytes, chunk=chunk)
-    return _vec.chunk_store_counts(keys, m=m, n=n, block_rows=block_rows,
-                                   chunk=chunk)
+    counts = _vec.chunk_store_counts(keys, m=m, n=n, block_rows=block_rows,
+                                     chunk=chunk)
+    obs.gauge("kernels.vec.stores.serial").set(counts["serial"])
+    obs.gauge("kernels.vec.stores.sort_fold").set(counts["sort_fold"])
+    obs.gauge("kernels.vec.stores.onehot_fold").set(counts["onehot_fold"])
+    return counts
 
 
 # ---------------------------------------------------------------------------
@@ -238,6 +243,13 @@ def partitioned_launch_geometry(cap: int, *, m: int, n: int,
     parts = max(1, (mn + part_elems - 1) // part_elems)
     cap_pad = _round_up(max(cap, 1), chunk)
     num_chunks = cap_pad // chunk
+    # launch-geometry telemetry (host-side, trace/launch boundary only):
+    # last geometry chosen + how many times geometry was computed
+    obs.counter("kernels.partition.geometry_calls").inc()
+    obs.gauge("kernels.partition.parts").set(parts)
+    obs.gauge("kernels.partition.part_elems").set(part_elems)
+    obs.gauge("kernels.partition.chunk").set(chunk)
+    obs.gauge("kernels.partition.num_chunks").set(num_chunks)
     return PartitionGeometry(part_elems=part_elems, parts=parts, chunk=chunk,
                              num_chunks=num_chunks,
                              max_steps=num_chunks + parts)

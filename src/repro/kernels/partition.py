@@ -173,6 +173,11 @@ def modeled_chunk_loads(keys, *, mn: int, part_elems: int, parts: int,
     chunk_id = np.asarray(steps.chunk_id)
     part_id = np.asarray(steps.part_id)
     loads = 1 + int((np.diff(chunk_id) != 0).sum())
+    from repro import obs
+    obs.gauge("kernels.partition.modeled.onepass_loads").set(loads)
+    obs.gauge("kernels.partition.modeled.lower_bound").set(nonempty_chunks)
+    obs.gauge("kernels.partition.modeled.all_pairs_loads").set(
+        parts * num_chunks)
     return {
         "onepass": loads,
         "legacy_all_pairs": parts * num_chunks,

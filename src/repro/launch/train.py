@@ -28,6 +28,7 @@ import argparse
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint.checkpoint import save_on_signal
 from repro.configs import get_config, get_smoke_config
 from repro.launch.mesh import make_dp_tp_mesh
@@ -112,13 +113,22 @@ def main():
             batch = make_batch(cfg, shape, step)
             batch = jax.tree.map(jax.device_put, batch,
                                  batch_shardings(batch, mesh))
-            if args.compress:
-                p, o, e, metrics = step_impl(state[0], state[1], state[2],
-                                             batch)
-                new_state = (p, o, e)
-            else:
-                p, o, metrics = step_impl(state[0], state[1], batch)
-                new_state = (p, o)
+            # runtime (not trace-time) span: the host-side wall clock of one
+            # dispatched step, including the collective rounds — with
+            # compression, the sparse-allreduce schedule rides in step_impl
+            with obs.span("train.step", step=step, compress=args.compress,
+                          schedule=args.schedule if args.compress else "dense",
+                          mesh=str(dict(mesh.shape))):
+                if args.compress:
+                    p, o, e, metrics = step_impl(state[0], state[1], state[2],
+                                                 batch)
+                    new_state = (p, o, e)
+                else:
+                    p, o, metrics = step_impl(state[0], state[1], batch)
+                    new_state = (p, o)
+                if obs.enabled():  # make the span's duration honest
+                    jax.block_until_ready(metrics["loss"])
+            obs.counter("train.steps").inc()
             if step % 10 == 0:
                 lr = metrics.get("lr")
                 lr_txt = f" lr {float(lr):.2e}" if lr is not None else ""

@@ -1,0 +1,28 @@
+"""repro.obs — zero-dependency observability: spans, metrics, perf ledger.
+
+Three layers (DESIGN.md §9):
+
+- :mod:`repro.obs.trace` — context-manager **spans** with monotonic timings
+  and attributes, gated by the ``SPKADD_OBS`` env switch (no-op and
+  HLO-invariant when off), JSONL-exportable, wrapping
+  ``jax.profiler.TraceAnnotation`` so spans land on TPU trace timelines.
+- :mod:`repro.obs.metrics` — always-on named **counters/gauges/histograms**
+  with snapshot/reset semantics; the common surface that absorbed the old
+  ad-hoc module globals (``sparse.sort_calls`` et al.).
+- :mod:`repro.obs.ledger` — the committed **perf-history ledger** under
+  ``results/history/`` keyed by (commit, backend, suite, geometry), plus
+  the rolling-baseline regression gate CI runs
+  (``scripts/perf_fleet.py`` / ``scripts/bench_report.py``).
+
+The convenience re-exports below are the instrumentation API the rest of
+the codebase uses: ``obs.span(...)``, ``obs.counter(...)``, etc.
+"""
+from repro.obs.trace import (OBS_ENV, OBS_JSONL_ENV, enabled, set_enabled,
+                             span, spans, clear, export_jsonl, read_jsonl)
+from repro.obs.metrics import (counter, gauge, histogram, snapshot, reset)
+
+__all__ = [
+    "OBS_ENV", "OBS_JSONL_ENV", "enabled", "set_enabled", "span", "spans",
+    "clear", "export_jsonl", "read_jsonl",
+    "counter", "gauge", "histogram", "snapshot", "reset",
+]
