@@ -11,7 +11,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import numpy as np
 
 from benchmarks.common import emit, gen_collection, time_fn
 from repro.core.sparse import concat

@@ -34,8 +34,8 @@ def render(entries, *, last: int = 10, tracked_only: bool = False,
         print("ledger is empty — run scripts/perf_fleet.py first")
         return 0
     commits = []
-    for e in entries:  # trajectory order, deduped
-        c = e["key"]["commit"]
+    for e in entries:  # trajectory order, deduped; tolerate partial entries
+        c = ledger.entry_key(e)[0]
         if c not in commits:
             commits.append(c)
     print(f"perf trajectory: {len(entries)} ledger entries, "
@@ -79,9 +79,12 @@ def main() -> int:
     render(entries, last=args.last, tracked_only=args.tracked)
     if args.gate:
         problems = ledger.check_regressions(entries, rel_tol=args.tolerance)
-        for p in problems:
+        missing = ledger.missing_baselines(entries)
+        for p in problems + missing:
             print(p)
-        if problems:
+        if problems or missing:
+            # regressions and never-observed oracles both fail the gate,
+            # with distinct statuses (REGRESSION ... vs NO BASELINE ...)
             return 1
         print("regression gate: clean")
     return 0

@@ -3,9 +3,21 @@
 # on a pre-baked image without network), then run the full suite.
 #
 # Usage: scripts/ci.sh [extra pytest args...]
+#        scripts/ci.sh static        # spkaddlint contract gate only
 # Env:   RESULTS_DIR (default: results) — where BENCH_*.json artifacts land
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+RESULTS_DIR="${RESULTS_DIR:-results}"
+
+# Static lane: prove the kernel contracts (one-sort, index dtype, step
+# tables, VMEM budget, source discipline) without running a single kernel.
+# Exit status is spkaddlint's: red on any non-waived finding. The JSON
+# findings artifact is what the CI job uploads/annotates from.
+if [[ "${1:-}" == "static" ]]; then
+    exec python scripts/spkaddlint.py --all \
+        --json "$RESULTS_DIR/spkaddlint.json"
+fi
 
 if [[ "${CI_SKIP_INSTALL:-0}" != "1" ]]; then
     python -m pip install -r requirements.txt || \
@@ -13,8 +25,6 @@ if [[ "${CI_SKIP_INSTALL:-0}" != "1" ]]; then
 fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
-
-RESULTS_DIR="${RESULTS_DIR:-results}"
 
 # Perf fleet: runs every benchmark smoke suite (table34 cross-regime gate,
 # sparse-allreduce traffic model, SpKAdd one-pass I/O oracle) with

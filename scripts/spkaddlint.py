@@ -1,0 +1,18 @@
+#!/usr/bin/env python3
+"""spkaddlint entry point — see repro.analysis.cli.
+
+Usage:
+    python scripts/spkaddlint.py --all --json results/spkaddlint.json
+    python scripts/spkaddlint.py --ast            # fast half (pre-commit)
+    python scripts/spkaddlint.py --list-rules
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

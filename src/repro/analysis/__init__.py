@@ -1,0 +1,17 @@
+"""repro.analysis — spkaddlint: static proofs of the engine's contracts.
+
+Zero new dependencies. Two layers (DESIGN.md §10):
+
+- :mod:`repro.analysis.ast_rules` — stdlib-``ast`` source rules (SPK1xx):
+  sort discipline, the compat.py experimental-import boundary, the
+  obs.metrics registry monopoly, span placement, traced-code determinism.
+- :mod:`repro.analysis.jaxpr_rules` — trace-time rules (SPKJ2xx): the
+  one-sort invariant across every regime x batch shape, int32 index
+  discipline at pallas_call boundaries, step-table legality, and the
+  VMEM working-set budget (:mod:`repro.analysis.vmem`).
+
+CLI: ``scripts/spkaddlint.py --all --json results/spkaddlint.json``.
+"""
+from repro.analysis.findings import Finding, RULES, active, parse_waivers
+
+__all__ = ["Finding", "RULES", "active", "parse_waivers"]

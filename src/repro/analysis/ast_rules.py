@@ -1,0 +1,186 @@
+"""Layer-2 spkaddlint rules: AST checks over ``src/repro``.
+
+Pure stdlib ``ast`` — no jax import, so this half runs anywhere (it is the
+fast half a pre-commit hook runs). Each rule resolves import aliases to
+dotted names (``jnp.argsort`` -> ``jax.numpy.argsort``) instead of string
+matching, so renamed imports cannot dodge a rule.
+
+Rule scoping is by repo-relative path under ``src/repro``:
+
+- SPK101 direct-sort: everywhere except ``core/sparse.py`` (the sanctioned
+  sort home).
+- SPK102 experimental-import: everywhere except ``compat.py``.
+- SPK103 adhoc-counter (``global``): everywhere except ``obs/``.
+- SPK104 span-boundary: ``obs.span`` must be a ``with`` context expression
+  and may only appear in :data:`SPAN_ALLOWED_FILES` /
+  :data:`SPAN_ALLOWED_DIRS`.
+- SPK105 traced-nondeterminism: host time / stdlib randomness calls inside
+  the traced packages :data:`TRACED_DIRS` (host-side packages — launch,
+  runtime, serve, data, obs — time their own work legitimately).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional
+
+from repro.analysis.findings import Finding, is_waived, parse_waivers
+
+SORT_HOME = "core/sparse.py"
+EXPERIMENTAL_HOME = "compat.py"
+
+SPAN_ALLOWED_FILES = {"core/engine.py", "core/streaming.py",
+                      "core/allreduce.py", "kernels/ops.py"}
+SPAN_ALLOWED_DIRS = ("obs/", "launch/", "runtime/", "serve/", "train/")
+
+GLOBAL_ALLOWED_DIRS = ("obs/",)
+
+TRACED_DIRS = ("core/", "kernels/", "models/")
+
+#: dotted call names that are direct sorts (SPK101)
+SORT_CALLS = {
+    "jax.numpy.sort", "jax.numpy.argsort", "jax.numpy.lexsort",
+    "jax.lax.sort", "jax.lax.sort_key_val",
+}
+
+#: dotted call prefixes that are host-time / nondeterminism (SPK105)
+NONDET_PREFIXES = ("time.", "datetime.", "random.", "numpy.random.")
+
+SPAN_CALLS = {"repro.obs.span", "repro.obs.trace.span"}
+
+
+def _alias_map(tree: ast.AST) -> Dict[str, str]:
+    """local name -> fully dotted name, from every import in the module
+    (function-local imports included — the map is a per-file approximation,
+    which is exact for this codebase's import style)."""
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                local = a.asname or a.name.split(".")[0]
+                aliases[local] = a.name if a.asname else a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom):
+            if node.module is None or node.level:  # relative imports: skip
+                continue
+            for a in node.names:
+                local = a.asname or a.name
+                aliases[local] = f"{node.module}.{a.name}"
+    # common shorthands that resolve through the package re-export layer
+    for local, full in list(aliases.items()):
+        if full == "jax.numpy":
+            aliases[local] = "jax.numpy"
+    return aliases
+
+
+def _dotted(node: ast.AST, aliases: Dict[str, str]) -> Optional[str]:
+    """Resolve an attribute chain / name to its dotted import path."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    root = aliases.get(node.id, node.id)
+    return ".".join([root] + list(reversed(parts)))
+
+
+def _in(rel: str, dirs) -> bool:
+    return any(rel.startswith(d) for d in dirs)
+
+
+def scan_source(source: str, rel: str) -> List[Finding]:
+    """Run every AST rule over one file (``rel`` is the path under
+    ``src/repro``, posix-style)."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:  # a broken file is its own finding
+        return [Finding("SPK101", rel, e.lineno or 0,
+                        f"file does not parse: {e.msg}", "fix the syntax")]
+    waivers = parse_waivers(source)
+    aliases = _alias_map(tree)
+    findings: List[Finding] = []
+
+    def emit(rule: str, node: ast.AST, message: str, fixit: str) -> None:
+        line = getattr(node, "lineno", 0)
+        findings.append(Finding(rule, rel, line, message, fixit,
+                                waived=is_waived(waivers, line, rule)))
+
+    # SPK102: jax.experimental imports outside compat.py
+    if rel != EXPERIMENTAL_HOME:
+        for node in ast.walk(tree):
+            mods: List[str] = []
+            if isinstance(node, ast.Import):
+                mods = [a.name for a in node.names]
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                mods = [node.module]
+            for mod in mods:
+                if mod == "jax.experimental" \
+                        or mod.startswith("jax.experimental."):
+                    emit("SPK102", node,
+                         f"direct import of {mod!r} outside compat.py",
+                         "import the re-export from repro.compat "
+                         "(pallas / pallas_tpu / shard_map) instead")
+
+    # SPK103: `global` outside obs/
+    if not _in(rel, GLOBAL_ALLOWED_DIRS):
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Global):
+                emit("SPK103", node,
+                     f"`global {', '.join(node.names)}` bypasses the "
+                     "obs.metrics registry",
+                     "use obs.counter(...)/obs.gauge(...) for mutable "
+                     "process state")
+
+    # call-based rules share one walk
+    with_context_calls = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                if isinstance(item.context_expr, ast.Call):
+                    with_context_calls.add(id(item.context_expr))
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _dotted(node.func, aliases)
+        if name is None:
+            continue
+        # SPK101: direct sorts outside the sort home
+        if name in SORT_CALLS and rel != SORT_HOME:
+            emit("SPK101", node,
+                 f"direct {name}() outside {SORT_HOME}",
+                 "route through repro.core.sparse.stable_argsort / "
+                 "stable_sort (the counted canonical sort)")
+        # SPK104: spans must be `with` contexts at launch boundaries
+        if name in SPAN_CALLS:
+            allowed = rel in SPAN_ALLOWED_FILES \
+                or _in(rel, SPAN_ALLOWED_DIRS)
+            if not allowed:
+                emit("SPK104", node,
+                     f"obs.span in {rel} — not a launch boundary",
+                     "instrument the wrapper that launches this code "
+                     "(engine/ops), not the traced body")
+            elif id(node) not in with_context_calls:
+                emit("SPK104", node,
+                     "obs.span called outside a `with` statement",
+                     "use `with obs.span(...):` so the span always closes")
+        # SPK105: host time / stdlib randomness in traced packages
+        if _in(rel, TRACED_DIRS) and name.startswith(NONDET_PREFIXES):
+            emit("SPK105", node,
+                 f"{name}() is host-nondeterministic inside traced code",
+                 "hoist timing to the launch boundary (obs.span) and "
+                 "randomness to jax.random keys threaded from the caller")
+    return findings
+
+
+def scan_tree(src_root: str) -> List[Finding]:
+    """Scan every ``.py`` file under ``src_root`` (the ``src/repro`` dir)."""
+    findings: List[Finding] = []
+    for dirpath, _, names in sorted(os.walk(src_root)):
+        for name in sorted(names):
+            if not name.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, name)
+            rel = os.path.relpath(path, src_root).replace(os.sep, "/")
+            with open(path, "r", encoding="utf-8") as fh:
+                findings.extend(scan_source(fh.read(), rel))
+    return findings

@@ -10,6 +10,12 @@ Two things drifted across the jax versions we target:
   ``TypeError`` there.
 
 Import from here instead of feature-testing jax at every call site.
+
+This module is also the **one sanctioned home for ``jax.experimental``
+imports** (spkaddlint rule SPK102): experimental APIs move between jax
+releases, so every consumer routes through the re-exports below
+(``pallas`` / ``pallas_tpu`` / ``shard_map``) and version skew stays a
+one-file problem.
 """
 from __future__ import annotations
 
@@ -21,6 +27,28 @@ try:  # jax >= 0.6: public top-level export
     _shard_map = jax.shard_map
 except AttributeError:  # jax 0.4.x: experimental home
     from jax.experimental.shard_map import shard_map as _shard_map
+
+# Pallas: experimental on every jax we target. Kernels import these
+# re-exports; a build without Pallas (minimal CPU wheels) leaves them None
+# and the kernel modules fail at import with a clear message instead of a
+# deep attribute error.
+try:
+    from jax.experimental import pallas as pallas
+except ImportError:  # pragma: no cover - jax always ships pallas today
+    pallas = None  # type: ignore[assignment]
+try:
+    from jax.experimental.pallas import tpu as pallas_tpu
+except ImportError:  # pragma: no cover - CPU-only builds lack the TPU dialect
+    pallas_tpu = None  # type: ignore[assignment]
+
+
+def require_pallas():
+    """Return the ``pallas`` module or raise a actionable ImportError."""
+    if pallas is None:
+        raise ImportError(
+            "jax.experimental.pallas is unavailable in this jax build; "
+            "the repro.kernels package requires it")
+    return pallas
 
 _REP_KWARG = ("check_rep" if "check_rep"
               in inspect.signature(_shard_map).parameters else "check_vma")

@@ -30,17 +30,15 @@ pair).
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro import obs
 from repro.compat import axis_size as _axis_size
 from repro.core.engine import scatter_accumulate
-from repro.core.topk import SparseUpdate, densify
+from repro.core.topk import SparseUpdate
 
 
 # ---------------------------------------------------------------------------

@@ -310,16 +310,21 @@ def _partition_fold(regime: str, geom, vmem_budget_bytes: int,
                     cost_model: Optional[Dict[str, float]]) -> str:
     """In-tile fold for a partitioned launch: ``blocked_spa`` keeps the
     serial fidelity scatter; ``vec`` picks one-hot vs sort-fold on the cost
-    model's tile-size boundary (one-hot additionally requires its
-    ``(chunk × part_elems)`` intermediates to fit the VMEM budget)."""
+    model's tile-size boundary (one-hot additionally requires its whole
+    step working set — tile, double-buffered inputs, and the
+    ``(chunk × part_elems)`` intermediates — to fit the VMEM budget; see
+    ``kernels.ops.fold_working_set_bytes``)."""
+    from repro.kernels import ops as kops
+
     if regime == "blocked_spa":
         return "serial"
     cm = default_cost_model()
     if cost_model:
         cm.update(cost_model)
-    onehot_bytes = geom.chunk * geom.part_elems * 8
+    onehot_ws = kops.fold_working_set_bytes(
+        "onehot", tile_elems=geom.part_elems, chunk=geom.chunk)
     return "onehot" if (geom.part_elems <= cm["vec_onehot_max_block_elems"]
-                        and onehot_bytes <= vmem_budget_bytes) else "sort"
+                        and onehot_ws <= vmem_budget_bytes) else "sort"
 
 
 def _partitioned_core(keys: jax.Array, vals: jax.Array,

@@ -54,10 +54,21 @@ def stable_argsort(keys: jax.Array, axis: int = -1) -> jax.Array:
 
     Routing all key argsorts here keeps the sort-count observable
     (:func:`sort_calls`): the partitioned one-pass regimes must issue
-    exactly one — the compress plan's — per engine call.
+    exactly one — the compress plan's — per engine call. This module is the
+    single sanctioned home for direct ``jnp.sort``/``jnp.argsort`` calls
+    (spkaddlint rule SPK101); everything else routes through here or
+    :func:`stable_sort`.
     """
     _SORT_COUNTER.inc()
     return jnp.argsort(keys, axis=axis, stable=True)
+
+
+def stable_sort(keys: jax.Array, axis: int = -1) -> jax.Array:
+    """Counted stable *value* sort — :func:`stable_argsort`'s twin for the
+    key-only consumers (symbolic phase, oracles) so every traced sort in the
+    repo shows up on the same ``sparse.stable_argsort.calls`` counter."""
+    _SORT_COUNTER.inc()
+    return jnp.sort(keys, axis=axis, stable=True)
 
 
 def sentinel_key(shape: Tuple[int, int]) -> int:
@@ -153,7 +164,7 @@ def from_dense(dense: jax.Array, cap: int) -> PaddedCOO:
     vals = jnp.where(valid, v, 0.0)
     nnz = valid.sum().astype(jnp.int32)
     # keep sorted by key for the merge-based algorithms
-    order = jnp.argsort(keys)
+    order = stable_argsort(keys)
     out = PaddedCOO(keys=keys[order], vals=vals[order], nnz=nnz, shape=(m, n))
     if cap > k:
         out = with_capacity(out, cap)
@@ -161,7 +172,7 @@ def from_dense(dense: jax.Array, cap: int) -> PaddedCOO:
 
 
 def sort_by_key(a: PaddedCOO) -> PaddedCOO:
-    order = jnp.argsort(a.keys)
+    order = stable_argsort(a.keys)
     return a._replace(keys=a.keys[order], vals=a.vals[order])
 
 

@@ -16,11 +16,8 @@ selectable SpKAdd algorithm.
 """
 from __future__ import annotations
 
-import functools
-from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sparse import (PaddedCOO, compress, concat, sentinel_key,
-                               with_capacity)
+                               stable_argsort, stable_sort, with_capacity)
 
 
 # ---------------------------------------------------------------------------
@@ -46,7 +46,7 @@ def symbolic_nnz(mats: Sequence[PaddedCOO]) -> jax.Array:
     O(sum nnz) data touched, vectorized.
     """
     sent = sentinel_key(mats[0].shape)
-    keys = jnp.sort(jnp.concatenate([a.keys for a in mats]))
+    keys = stable_sort(jnp.concatenate([a.keys for a in mats]))
     valid = keys != sent
     first = jnp.concatenate([jnp.ones((1,), bool), keys[1:] != keys[:-1]])
     return (first & valid).sum().astype(jnp.int32)
@@ -58,7 +58,7 @@ def symbolic_nnz_per_column(mats: Sequence[PaddedCOO]) -> jax.Array:
     shape = mats[0].shape
     m, n = shape
     sent = sentinel_key(shape)
-    keys = jnp.sort(jnp.concatenate([a.keys for a in mats]))
+    keys = stable_sort(jnp.concatenate([a.keys for a in mats]))
     valid = keys != sent
     first = jnp.concatenate([jnp.ones((1,), bool), keys[1:] != keys[:-1]])
     is_new = first & valid
@@ -122,7 +122,7 @@ def _resparsify_flat(flat: jax.Array, shape, out_cap: int) -> PaddedCOO:
     vals = flat[idx]
     valid = vals != 0.0
     keys = jnp.where(valid, idx.astype(jnp.int32), sentinel_key(shape))
-    order = jnp.argsort(keys)
+    order = stable_argsort(keys)
     return PaddedCOO(keys=keys[order], vals=jnp.where(valid, vals, 0.0)[order],
                      nnz=valid.sum().astype(jnp.int32), shape=shape)
 

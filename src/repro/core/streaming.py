@@ -29,14 +29,15 @@ mini-batched sparse gradient aggregation.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro import obs
 from repro.core.engine import spkadd_batched_ragged, spkadd_run
-from repro.core.sparse import PaddedCOO, make_empty, sentinel_key
+from repro.core.sparse import (PaddedCOO, make_empty, sentinel_key,
+                               stable_argsort)
 
 
 def _truncate_by_magnitude(a: PaddedCOO, cap: int) -> PaddedCOO:
@@ -50,7 +51,7 @@ def _truncate_by_magnitude(a: PaddedCOO, cap: int) -> PaddedCOO:
     vals = a.vals[idx]
     valid = keys != sent
     vals = jnp.where(valid, vals, 0.0)
-    order = jnp.argsort(keys)
+    order = stable_argsort(keys)
     return PaddedCOO(keys=keys[order], vals=vals[order],
                      nnz=jnp.minimum(a.nnz, valid.sum()).astype(jnp.int32),
                      shape=a.shape)

@@ -22,7 +22,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.compat import pallas as pl
 
 HASH_PRIME = 2654435761  # Knuth multiplicative constant
 

@@ -94,6 +94,25 @@ def spa_accumulate_flat(keys: jax.Array, vals: jax.Array, *, m: int, n: int,
 DEFAULT_ONEHOT_MAX_BLOCK_ELEMS = 4096
 
 
+def fold_working_set_bytes(fold: str, *, tile_elems: int, chunk: int) -> int:
+    """Estimated VMEM working set of ONE grid step of a sliding/partitioned
+    launch — the single formula shared by the fold choosers here and in the
+    engine, and by the static VMEM-budget rule (``repro.analysis.vmem``), so
+    the analyzer proves exactly the budget the runtime enforces.
+
+    Counts the f32 output tile, the double-buffered int32-key/f32-val input
+    blocks (two in-flight ``(chunk,)`` pairs, 8 B per element), and — for the
+    one-hot fold only — the materialized ``(chunk, tile_elems)`` f32 one-hot
+    plus its int32 iota (8 B per cell). The sort-fold's bitonic network
+    permutes the resident chunk in place (vector registers), so it adds no
+    VMEM term.
+    """
+    out_tile = tile_elems * 4
+    inputs = 2 * chunk * 8
+    inter = chunk * tile_elems * 8 if fold == "onehot" else 0
+    return out_tile + inputs + inter
+
+
 def vec_launch_geometry(cap: int, *, m: int, n: int,
                         block_rows: int | None = None,
                         vmem_budget_bytes: int = 16 * 1024 * 1024,
@@ -149,12 +168,13 @@ def vec_accumulate(keys: jax.Array, vals: jax.Array, *, m: int, n: int,
         vmem_budget_bytes=vmem_budget_bytes, chunk=chunk)
     if fold == "auto":
         # the one-hot fold materializes a (chunk, block_elems) f32 one-hot
-        # plus an int32 iota of the same shape — those intermediates must
-        # fit the VMEM budget alongside the tile, or the "small tile" regime
-        # is a lie on real hardware
-        onehot_bytes = chunk * block_rows * n * 8
+        # plus an int32 iota of the same shape — the WHOLE step working set
+        # (tile + double-buffered inputs + those intermediates) must fit the
+        # VMEM budget, or the "small tile" regime is a lie on real hardware
+        onehot_ws = fold_working_set_bytes(
+            "onehot", tile_elems=block_rows * n, chunk=chunk)
         fold = "onehot" if (block_rows * n <= onehot_max_block_elems
-                            and onehot_bytes <= vmem_budget_bytes) \
+                            and onehot_ws <= vmem_budget_bytes) \
             else "sort"
 
     cap_pad = _round_up(max(cap, 1), chunk)
@@ -300,7 +320,7 @@ def hash_accumulate(keys: jax.Array, vals: jax.Array, *, sent: int,
                                              table_size=table_size,
                                              interpret=interpret)
     occupied = tkeys != -1
-    order = jnp.argsort(jnp.logical_not(occupied), stable=True)
+    order = _stable_argsort(jnp.logical_not(occupied))
     ck = jnp.where(occupied[order], tkeys[order], sent)[:cap]
     cv = jnp.where(occupied[order], tvals[order], 0.0)[:cap]
     nnz = occupied.sum().astype(jnp.int32)

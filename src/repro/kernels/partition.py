@@ -49,9 +49,9 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas as pl
+from repro.compat import pallas_tpu as pltpu
 from repro.kernels import vec_accum as _vec
 
 

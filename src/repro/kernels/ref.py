@@ -8,6 +8,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import sparse as _sparse
+
 
 def spa_accumulate_ref(keys: jax.Array, vals: jax.Array, *, m: int, n: int) -> jax.Array:
     """Dense scatter-add oracle: keys are CSC-linearized, >= m*n means padding."""
@@ -22,7 +24,7 @@ def hash_accumulate_ref(keys: jax.Array, vals: jax.Array, *, sent: int):
     """Key-grouped sums, returned sorted by key: (sorted unique keys padded
     with ``sent``, their summed values, distinct count)."""
     cap = keys.shape[0]
-    order = jnp.argsort(keys)
+    order = _sparse.stable_argsort(keys)
     k_s = keys[order]
     v_s = jnp.where(k_s != sent, vals[order], 0.0).astype(jnp.float32)
     valid = k_s != sent
@@ -39,7 +41,7 @@ def hash_accumulate_ref(keys: jax.Array, vals: jax.Array, *, sent: int):
 
 def hash_symbolic_ref(keys: jax.Array, *, sent: int) -> jax.Array:
     """Distinct-valid-key count."""
-    k_s = jnp.sort(keys)
+    k_s = _sparse.stable_sort(keys)
     valid = k_s != sent
     first = jnp.concatenate([jnp.ones((1,), bool), k_s[1:] != k_s[:-1]])
     return (first & valid).sum().astype(jnp.int32)

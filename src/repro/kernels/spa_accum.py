@@ -44,8 +44,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
+from repro.compat import pallas as pl
 from repro.kernels import vec_accum as _vec
 
 

@@ -14,7 +14,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.compat import pallas as pl
 
 
 def _topk_kernel(x_ref, idx_ref, val_ref, *, block: int, k: int):

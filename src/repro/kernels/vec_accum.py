@@ -206,7 +206,7 @@ def serial_fold(slot: jax.Array, vals: jax.Array, valid: jax.Array,
     (O(chunk) dependent round-trips through the store unit). Masked
     elements add an exact ``+0.0`` at tile slot 0, matching the reference
     oracle's discard convention."""
-    from jax.experimental import pallas as pl
+    from repro.compat import pallas as pl
 
     slot_safe = jnp.where(valid, slot, 0)
     vals_m = jnp.where(valid, vals, 0.0).astype(jnp.float32)
@@ -228,7 +228,7 @@ def sort_fold(slot: jax.Array, vals: jax.Array, valid: jax.Array,
     run** (compacted, O(distinct) serial stores) by overwrite — each total
     already continues the accumulator's prefix, which is what keeps the
     cross-chunk fold left-associated."""
-    from jax.experimental import pallas as pl
+    from repro.compat import pallas as pl
 
     block_elems = out_ref.shape[0] * out_ref.shape[1]
     out_flat = out_ref[...].reshape(block_elems)

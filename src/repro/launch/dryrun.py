@@ -46,11 +46,10 @@ import time
 import traceback
 
 import jax
-import numpy as np
 
 from repro.configs import ARCHS, get_config, supports_shape
 from repro.data.synthetic import input_specs, decode_inputs
-from repro.launch.hlo_analysis import analyze_compiled, PEAK_FLOPS, HBM_BW, ICI_BW
+from repro.launch.hlo_analysis import analyze_compiled
 from repro.launch.mesh import make_production_mesh, chips
 from repro.models import build_model
 from repro.models.common import SHAPES
@@ -77,7 +76,7 @@ def serve_param_sds(params_sds):
 def serve_shardings(params_sds, mesh):
     """TP-only (no FSDP gather per token)."""
     from repro.sharding.params import param_spec, _validated
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding
 
     def spec(path, leaf):
         p = param_spec(path, leaf, mesh)

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.configs import get_config, get_smoke_config
 from repro.models import build_model
 from repro.sharding import mesh_context
-from repro.train import make_decode_step, make_prefill_step
+from repro.train import make_decode_step
 
 
 def main():

@@ -26,7 +26,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import numpy as np
 
 from repro import obs
 from repro.checkpoint.checkpoint import save_on_signal

@@ -10,7 +10,7 @@ learned table, so assigned stress shapes (32k/4k decoder lengths vs Whisper's
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

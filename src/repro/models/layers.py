@@ -7,8 +7,7 @@ would hide them behind a custom call, see DESIGN.md §7).
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

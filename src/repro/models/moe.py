@@ -19,6 +19,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.sparse import stable_argsort
 from repro.models.common import ModelConfig, dense_init
 from repro.sharding import shard
 
@@ -65,7 +66,7 @@ def moe_ffn(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
     # all-to-all of the bf16 activations instead of fp32 all-reduces of
     # replicated buffers.
     flat_e = shard(expert.reshape(T * K).astype(jnp.int32), "batch")
-    order = shard(jnp.argsort(flat_e, stable=True), "batch")    # (T*K,)
+    order = shard(stable_argsort(flat_e), "batch")    # (T*K,)
     sorted_e = shard(flat_e[order], "batch")
     starts = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=jnp.int32))
     pos = shard(jnp.arange(T * K, dtype=jnp.int32) - starts[sorted_e], "batch")

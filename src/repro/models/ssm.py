@@ -14,8 +14,7 @@ Decode is the O(1) recurrent form: state ← dA·state + dt·B⊗x, y = C·state
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ computed in sequence chunks so the (B, S, V) logits tensor never materializes
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -156,6 +156,24 @@ def tracked_names(names: Iterable[str],
             if any(fnmatch.fnmatchcase(n, pat) for pat in tracked)]
 
 
+def missing_baselines(entries: Sequence[Dict[str, Any]], *,
+                      tracked: Sequence[str] = TRACKED_ORACLES) -> List[str]:
+    """Tracked oracle patterns with no matching ledger series at all.
+
+    The regression gate silently passes a series it has never seen; a gate
+    run against a ledger that lacks a whole tracked family is vouching for
+    a claim it cannot check. Returns one human-readable line per missing
+    pattern ([] == every tracked family has at least one observation).
+    """
+    names = {name for (_, _, _, name) in series(entries)}
+    return [
+        f"NO BASELINE {pat}: no ledger series matches this tracked oracle "
+        f"— run scripts/perf_fleet.py to seed results/history/"
+        for pat in tracked
+        if not any(fnmatch.fnmatchcase(n, pat) for n in names)
+    ]
+
+
 def check_regressions(entries: Sequence[Dict[str, Any]], *,
                       tracked: Sequence[str] = TRACKED_ORACLES,
                       rel_tol: float = 0.05,

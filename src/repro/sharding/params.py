@@ -7,7 +7,6 @@ simply replicate over 'data' instead of failing to lower.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import numpy as np

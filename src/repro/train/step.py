@@ -19,17 +19,16 @@ SpKAdd (schedules: gather_kway / tree_2way / ring_2way). Two mesh regimes:
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.allreduce import (MIN_COMPRESS_ELEMS, compressed_gradient_mean,
                                   compressed_gradient_mean_2d)
-from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.optim import adamw_update, cosine_schedule
 from repro.sharding import mesh_context
 
 

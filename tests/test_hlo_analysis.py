@@ -2,7 +2,6 @@
 XLA's own cost_analysis does not (this test documents both facts)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.compat import cost_analysis_dict
 from repro.launch.hlo_analysis import ModuleAnalyzer

@@ -22,7 +22,6 @@ import pytest
 from repro import obs
 from repro.core import engine as E
 from repro.core import sparse as S
-from repro.core.spkadd import spkadd
 from repro.core.streaming import StreamingAccumulator
 from repro.obs import ledger, metrics, trace
 

@@ -3,7 +3,6 @@
 Mirrors the paper's claims: all algorithms compute the same B = Σ A_i; the
 symbolic phase returns exact nnz(B); compression factor cf ≥ 1.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
