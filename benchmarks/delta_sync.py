@@ -1,0 +1,219 @@
+"""Chaos soak + traffic oracle for the sparse parameter-delta sync.
+
+Three seeded cells over the publisher/subscriber protocol
+(``runtime/delta_sync.py``) behind a :class:`FaultyTransport` wire
+(``runtime/faults.py``):
+
+- ``lossless_chaos`` — ``k=1.0`` under >=10% frame drop + corruption +
+  duplication + one stalled epoch: the subscriber must converge to
+  **bitwise** equality with the publisher (shadow AND true params — updates
+  live on a dyadic grid, multiples of ``2^-10`` with bounded magnitude, so
+  every fp32 add in every fold order is exact) with zero degradations.
+- ``ef_sparse`` — ``k=0.01`` under the same chaos: subscriber stays bitwise
+  on the *shadow* trajectory (the protocol invariant at any k), the
+  residual bound ``|subscriber - params| == |EF residual|`` holds, and mean
+  wire bytes per sync undercut full-checkpoint shipping — the
+  ``chaos/bytes_per_sync`` oracle the perf ledger tracks.
+- ``degrade_reload`` — a replica asleep past ``max_staleness`` wakes,
+  reloads the newest shadow checkpoint **exactly once**, folds the
+  remainder, and tracks the publisher from then on without degrading again.
+
+``--smoke`` gates all three (exit nonzero on any violation) and emits
+``BENCH_delta_sync.json`` through ``scripts/perf_fleet.py`` into the
+committed perf-history ledger.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, write_json
+from repro.runtime import (DeltaPublisher, DeltaSubscriber, FaultSpec,
+                           FaultyTransport, InProcTransport)
+
+#: leaf name -> shape; sizes straddle the per-leaf top-k budgets
+TREE_SHAPES = {"wq": (64, 48), "w1": (96, 32), "bias": (257,)}
+
+GRID = 2.0 ** -10  # update quantum: dyadic, so fp32 accumulation is exact
+
+
+def _grid_tree(rng, lo=-512, hi=512):
+    """Dyadic-grid tree: every value a small multiple of 2^-10 — all sums
+    below 2^13 are exactly representable, making bitwise assertions
+    independent of fold order."""
+    return {k: jnp.asarray(rng.integers(lo, hi, s).astype(np.float32) * GRID)
+            for k, s in TREE_SHAPES.items()}
+
+
+def _tree_add(a, b):
+    return {k: a[k] + b[k] for k in a}
+
+
+def _bitwise_equal(a, b) -> bool:
+    return all(bool(jnp.all(jnp.asarray(a[k], jnp.float32)
+                            == jnp.asarray(b[k], jnp.float32))) for k in a)
+
+
+def _max_abs_diff(a, b) -> float:
+    return max(float(jnp.max(jnp.abs(jnp.asarray(a[k], jnp.float32)
+                                     - jnp.asarray(b[k], jnp.float32))))
+               for k in a)
+
+
+CHAOS = dict(drop_p=0.15, dup_p=0.05, corrupt_p=0.06, stall_epochs=(5,),
+             stall_release_after=2)
+
+
+def run_chaos(label: str, *, k_fraction: float, epochs: int = 12,
+              sync_every: int = 2, max_staleness: int = 6, seed: int = 7,
+              drain_rounds: int = 4) -> dict:
+    """Publish ``epochs`` grid updates through the chaos wire, syncing the
+    subscriber every ``sync_every`` epochs + a bounded drain at the end."""
+    rng = np.random.default_rng(seed)
+    params = _grid_tree(rng)
+    wire = FaultyTransport(InProcTransport(), FaultSpec(seed=seed, **CHAOS))
+    pub = DeltaPublisher(params, wire, k_fraction=k_fraction,
+                         window_epochs=epochs + 1)
+    sub = DeltaSubscriber(params, wire, max_staleness=max_staleness,
+                          seed=seed, sleep_fn=lambda _s: None)
+
+    reports = []
+    bytes_per_sync = []
+    for e in range(1, epochs + 1):
+        params = _tree_add(params, _grid_tree(rng, -256, 256))
+        bytes_per_sync.append(pub.publish(params).bytes)
+        if e % sync_every == 0:
+            reports.append(sub.sync())
+    # end-of-run drain: release anything the wire still holds, then give
+    # the retry/resend path a bounded number of rounds to converge
+    wire.flush()
+    rounds = 0
+    while sub.applied_epoch < pub.epoch and rounds < drain_rounds:
+        # control-plane hint: a terminal epoch whose every frame dropped is
+        # invisible from the wire alone — chase the publisher's real epoch
+        reports.append(sub.sync(hint_epoch=pub.epoch))
+        rounds += 1
+
+    windows = [r.window for r in reports if r.window]
+    res = {
+        "label": label,
+        "converged": sub.applied_epoch == pub.epoch,
+        "shadow_bitwise": _bitwise_equal(sub.params, pub.shadow_params()),
+        "params_bitwise": _bitwise_equal(sub.params, params),
+        "ef_error": _max_abs_diff(sub.params, params),
+        "residual_bound": max(float(jnp.max(jnp.abs(r)))
+                              for r in pub._residual),
+        "degradations": sub.degradations,
+        "retries": sub.total_retries,
+        "corrupt": sum(r.frames_corrupt for r in reports),
+        "dup": sum(r.frames_duplicate for r in reports),
+        "injected": dict(wire.injected),
+        "bytes_per_sync": float(np.mean(bytes_per_sync)),
+        "dense_bytes": int(sum(np.prod(s) * 4 for s in TREE_SHAPES.values())),
+        "catchup_window_max": max(windows) if windows else 0,
+        "drain_rounds": rounds,
+    }
+    emit(f"chaos/{label}/bytes_per_sync", res["bytes_per_sync"],
+         f"dense={res['dense_bytes']} k={k_fraction}")
+    emit(f"chaos/{label}/catchup_window_max", res["catchup_window_max"],
+         f"syncs={len(reports)} retries={res['retries']}")
+    emit(f"chaos/{label}/faults", float(sum(wire.injected.values())),
+         " ".join(f"{k}={v}" for k, v in sorted(wire.injected.items())))
+    return res
+
+
+def run_degrade(label: str = "degrade_reload", *, epochs_asleep: int = 9,
+                epochs_after: int = 3, max_staleness: int = 4,
+                ckpt_every: int = 4, seed: int = 11) -> dict:
+    """Beyond-bound replica: sleeps through ``epochs_asleep`` epochs, then
+    must reload the newest shadow checkpoint exactly once and track."""
+    rng = np.random.default_rng(seed)
+    params = _grid_tree(rng)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        wire = InProcTransport()  # chaos-free: isolates the staleness ladder
+        pub = DeltaPublisher(params, wire, k_fraction=1.0,
+                             window_epochs=epochs_asleep + epochs_after + 1,
+                             ckpt_dir=ckpt_dir, checkpoint_every=ckpt_every)
+        sub = DeltaSubscriber(params, wire, max_staleness=max_staleness,
+                              ckpt_dir=ckpt_dir, seed=seed,
+                              sleep_fn=lambda _s: None)
+        for _ in range(epochs_asleep):
+            params = _tree_add(params, _grid_tree(rng, -256, 256))
+            pub.publish(params)
+        wake = sub.sync()  # beyond the bound -> reload + fold remainder
+        for _ in range(epochs_after):
+            params = _tree_add(params, _grid_tree(rng, -256, 256))
+            pub.publish(params)
+            sub.sync()
+    res = {
+        "label": label,
+        "wake_degraded": wake.degraded,
+        "wake_staleness": wake.staleness,
+        "degradations": sub.degradations,
+        "converged": sub.applied_epoch == pub.epoch,
+        "params_bitwise": _bitwise_equal(sub.params, pub.shadow_params()),
+    }
+    emit(f"chaos/{label}/degradations", float(res["degradations"]),
+         f"wake_staleness={wake.staleness} bound={max_staleness}")
+    return res
+
+
+def smoke() -> int:
+    failures = []
+
+    a = run_chaos("lossless_chaos", k_fraction=1.0)
+    if not (a["converged"] and a["shadow_bitwise"] and a["params_bitwise"]):
+        failures.append(f"lossless_chaos not bitwise: {a}")
+    if a["degradations"] != 0:
+        failures.append(f"lossless_chaos degraded: {a['degradations']}")
+    inj = a["injected"]
+    if not (inj.get("drop", 0) and inj.get("corrupt", 0)
+            and inj.get("stall", 0)):
+        failures.append(f"chaos wire injected too little: {inj}")
+
+    b = run_chaos("ef_sparse", k_fraction=0.01)
+    if not (b["converged"] and b["shadow_bitwise"]):
+        failures.append(f"ef_sparse lost the shadow trajectory: {b}")
+    # EF bound: subscriber error vs true params is exactly the publisher's
+    # residual mass (grid arithmetic makes the identity exact)
+    if b["ef_error"] > b["residual_bound"] + 1e-6:
+        failures.append(f"ef_sparse error {b['ef_error']} exceeds residual "
+                        f"bound {b['residual_bound']}")
+    if b["bytes_per_sync"] >= b["dense_bytes"]:
+        failures.append(f"sparse sync moved {b['bytes_per_sync']}B >= dense "
+                        f"{b['dense_bytes']}B")
+
+    c = run_degrade()
+    if c["degradations"] != 1 or not c["wake_degraded"]:
+        failures.append(f"degrade ladder fired {c['degradations']}x "
+                        f"(want exactly 1): {c}")
+    if not (c["converged"] and c["params_bitwise"]):
+        failures.append(f"post-reload replica off trajectory: {c}")
+
+    for f in failures:
+        emit("chaos/FAILED", 1.0, f)
+        print(f"FAIL: {f}", file=sys.stderr)
+    if not failures:
+        emit("chaos/ok", 0.0, "all chaos cells green")
+    return 1 if failures else 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="gate the three chaos cells (CI)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write BENCH_delta_sync.json (perf trajectory)")
+    args = ap.parse_args()
+    rc = smoke()
+    if args.json:
+        write_json(args.json, suite="delta_sync_smoke", status=rc)
+    sys.exit(rc)
+
+
+if __name__ == "__main__":
+    main()

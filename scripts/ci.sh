@@ -4,6 +4,7 @@
 #
 # Usage: scripts/ci.sh [extra pytest args...]
 #        scripts/ci.sh static        # spkaddlint contract gate only
+#        scripts/ci.sh chaos         # fault-injection smoke lane only
 # Env:   RESULTS_DIR (default: results) — where BENCH_*.json artifacts land
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -17,6 +18,18 @@ RESULTS_DIR="${RESULTS_DIR:-results}"
 if [[ "${1:-}" == "static" ]]; then
     exec python scripts/spkaddlint.py --all \
         --json "$RESULTS_DIR/spkaddlint.json"
+fi
+
+# Chaos lane: the robustness envelope in isolation. Runs the delta-sync and
+# supervisor/checkpoint tests, then the seeded fault-injection soak
+# (benchmarks/delta_sync.py --smoke) through the perf fleet so its traffic
+# oracles (bytes-per-sync, catch-up SpKAdd window) land in the committed
+# ledger and the regression gate sees them.
+if [[ "${1:-}" == "chaos" ]]; then
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+        tests/test_delta_sync.py tests/test_substrate.py
+    exec python scripts/perf_fleet.py --only delta_sync \
+        --results "$RESULTS_DIR"
 fi
 
 if [[ "${CI_SKIP_INSTALL:-0}" != "1" ]]; then

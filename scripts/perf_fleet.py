@@ -40,6 +40,7 @@ SUITES = {
     "sparse_allreduce": ("benchmarks.sparse_allreduce_bytes",
                          "BENCH_sparse_allreduce.json"),
     "spkadd_io": ("benchmarks.spkadd_io", "BENCH_spkadd_io.json"),
+    "delta_sync": ("benchmarks.delta_sync", "BENCH_delta_sync.json"),
 }
 
 

@@ -34,6 +34,7 @@ WEIGHTS = {
     "test_vec_accum.py": 5,
     "test_partition.py": 5,
     "test_kernels.py": 4,
+    "test_delta_sync.py": 4,
     "test_analysis.py": 3,
     "test_layers.py": 3,
     "test_extensions.py": 3,

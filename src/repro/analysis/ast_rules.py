@@ -17,6 +17,11 @@ Rule scoping is by repo-relative path under ``src/repro``:
 - SPK105 traced-nondeterminism: host time / stdlib randomness calls inside
   the traced packages :data:`TRACED_DIRS` (host-side packages — launch,
   runtime, serve, data, obs — time their own work legitimately).
+- SPK106 bare-assert: no ``assert`` statements anywhere under ``src/repro``
+  — they vanish under ``python -O``, so validation silently stops
+  validating. Argument checks must raise ``ValueError``; a genuinely
+  internal invariant may carry an inline waiver. Test files are exempt by
+  construction (only ``src/repro`` is scanned).
 """
 from __future__ import annotations
 
@@ -130,6 +135,14 @@ def scan_source(source: str, rel: str) -> List[Finding]:
                      "obs.metrics registry",
                      "use obs.counter(...)/obs.gauge(...) for mutable "
                      "process state")
+
+    # SPK106: bare assert — stripped under `python -O`
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assert):
+            emit("SPK106", node,
+                 "bare `assert` — validation that vanishes under python -O",
+                 "raise ValueError for argument validation; waive inline "
+                 "(# spkaddlint: disable=SPK106) for internal invariants")
 
     # call-based rules share one walk
     with_context_calls = set()

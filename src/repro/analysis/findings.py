@@ -46,6 +46,10 @@ RULES: Dict[str, Rule] = {r.rule: r for r in [
     Rule("SPK105", "traced-nondeterminism",
          "no host time/stdlib randomness in traced code (core/, kernels/, "
          "models/) — traced programs must be replay-deterministic"),
+    Rule("SPK106", "bare-assert",
+         "no bare `assert` in src/repro — asserts vanish under `python -O`, "
+         "so argument validation must raise ValueError (internal invariants "
+         "may carry an inline waiver; test files are not scanned)"),
     Rule("SPKJ201", "one-sort",
          "each engine entry point lowers to its regime's exact stable-sort "
          "count (1 for the partitioned regimes; max(1, k-1) for tree) — the "

@@ -1,2 +1,3 @@
 from repro.checkpoint.checkpoint import (save_checkpoint, restore_checkpoint,
-                                         latest_step, AsyncCheckpointer)
+                                         latest_step, AsyncCheckpointer,
+                                         save_on_signal)

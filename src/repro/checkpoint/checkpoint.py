@@ -16,6 +16,7 @@ from __future__ import annotations
 import json
 import os
 import queue
+import shutil
 import signal
 import threading
 from typing import Any, Optional
@@ -30,8 +31,16 @@ def _flatten(tree):
 
 
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
-    path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    os.makedirs(path, exist_ok=True)
+    """Crash-atomic save: everything is written into ``step_XXXXXXXX.tmp``
+    and ``os.replace``d into place as the last act. A crash mid-write
+    leaves only a ``.tmp`` dir (invisible to :func:`latest_step`, replaced
+    wholesale by the next attempt) — it can never merge into a later
+    re-save of the same step the way a torn final dir could."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.isdir(tmp):
+        shutil.rmtree(tmp)  # leftover from a crashed attempt
+    os.makedirs(tmp)
     leaves, treedef = _flatten(tree)
     manifest = {"step": step, "treedef": str(treedef), "n_leaves": len(leaves),
                 "dtypes": [], "shapes": []}
@@ -39,12 +48,15 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
         arr = np.asarray(jax.device_get(leaf))
         manifest["dtypes"].append(str(arr.dtype))
         manifest["shapes"].append(list(arr.shape))
-        np.save(os.path.join(path, f"leaf_{i:05d}.npy"), arr)
-    with open(os.path.join(path, "manifest.json"), "w") as f:
+        np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
-    with open(os.path.join(path, ".complete"), "w") as f:
+    with open(os.path.join(tmp, ".complete"), "w") as f:
         f.write("ok")
-    return path
+    if os.path.isdir(final):
+        shutil.rmtree(final)  # re-save replaces; it must never merge
+    os.replace(tmp, final)
+    return final
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
@@ -52,9 +64,14 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
         return None
     steps = []
     for name in os.listdir(ckpt_dir):
-        if name.startswith("step_") and \
-                os.path.exists(os.path.join(ckpt_dir, name, ".complete")):
-            steps.append(int(name.split("_")[1]))
+        if not name.startswith("step_") or name.endswith(".tmp"):
+            continue
+        try:
+            step = int(name.split("_")[1])
+        except ValueError:
+            continue  # foreign step_* entry, not ours
+        if os.path.exists(os.path.join(ckpt_dir, name, ".complete")):
+            steps.append(step)
     return max(steps) if steps else None
 
 
@@ -106,7 +123,10 @@ class AsyncCheckpointer:
         try:
             self._q.put_nowait((step, host_tree))
         except queue.Full:
-            _ = self._q.get_nowait()  # drop the stale pending save
+            try:
+                _ = self._q.get_nowait()  # drop the stale pending save
+            except queue.Empty:
+                pass  # worker dequeued between the two calls — queue free now
             self._q.put_nowait((step, host_tree))
 
     def close(self):

@@ -78,7 +78,8 @@ def halving_2way(u: SparseUpdate, axis: str) -> jax.Array:
     the bytes tell the tree-vs-kway story the paper's Table I tells for I/O.
     """
     p = _axis_size(axis)
-    assert p & (p - 1) == 0, "halving_2way needs a power-of-two axis"
+    if p & (p - 1) != 0:
+        raise ValueError("halving_2way needs a power-of-two axis")
     me = jax.lax.axis_index(axis)
     idx, val = u.idx, u.val
     rounds = p.bit_length() - 1

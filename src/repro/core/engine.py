@@ -490,9 +490,11 @@ def stack_collections(collections: Sequence[Sequence[PaddedCOO]]
     k = len(collections[0])
     shape = collections[0][0].shape
     for coll in collections:
-        assert len(coll) == k, "all collections must have the same k"
+        if len(coll) != k:
+            raise ValueError("all collections must have the same k")
         for a in coll:
-            assert a.shape == shape, "stacked collections must share a shape"
+            if a.shape != shape:
+                raise ValueError("stacked collections must share a shape")
     return [
         PaddedCOO(
             keys=jnp.stack([coll[i].keys for coll in collections]),

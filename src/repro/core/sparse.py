@@ -334,7 +334,8 @@ def concat(mats, total_cap: int | None = None) -> PaddedCOO:
     """Concatenate k PaddedCOOs of identical logical shape (no dedup)."""
     shape = mats[0].shape
     for a in mats:
-        assert a.shape == shape, "SpKAdd inputs must share a logical shape"
+        if a.shape != shape:
+            raise ValueError("SpKAdd inputs must share a logical shape")
     keys = jnp.concatenate([a.keys for a in mats])
     vals = jnp.concatenate([a.vals for a in mats])
     nnz = functools.reduce(lambda x, y: x + y, [a.nnz for a in mats])

@@ -80,7 +80,9 @@ class StreamingAccumulator:
         self.n_flushes = 0
 
     def push(self, a: PaddedCOO) -> None:
-        assert a.shape == self.shape, "stream matrices must share the shape"
+        if a.shape != self.shape:
+            raise ValueError(f"stream matrices must share the shape: got "
+                             f"{a.shape}, accumulator is {self.shape}")
         self._buffer.append(a)
         self.n_seen += 1
         if len(self._buffer) >= self.batch_k * self.window_batch:

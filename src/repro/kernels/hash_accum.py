@@ -75,13 +75,16 @@ def hash_accumulate_raw(keys: jax.Array, vals: jax.Array, *, sent: int,
                         interpret: bool = True):
     """Insert every (key, val) into a VMEM hash table. Returns the raw table
     (tkeys == -1 marks empty slots)."""
-    assert keys.ndim == 1 and keys.shape == vals.shape
+    if keys.ndim != 1 or keys.shape != vals.shape:
+        raise ValueError(f"keys/vals must be matching 1-D streams, got "
+                         f"{keys.shape} vs {vals.shape}")
     cap = keys.shape[0]
     if table_size is None:
         table_size = 1
         while table_size < 2 * (cap + 1):
             table_size *= 2
-    assert table_size & (table_size - 1) == 0, "table size must be 2^q"
+    if table_size & (table_size - 1) != 0:
+        raise ValueError("table size must be 2^q")
 
     kernel = functools.partial(_hash_kernel, nnz_cap=cap,
                                table_size=table_size, sent=sent)

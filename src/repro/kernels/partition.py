@@ -97,13 +97,18 @@ def partitioned_accumulate_raw(keys: jax.Array, vals: jax.Array,
     result's leading ``mn`` elements per batch are the col-major dense
     accumulator in key order (``flat[b, key]`` = accumulated value).
     """
-    assert keys.ndim == 2 and keys.shape == vals.shape
-    assert chunk_id.shape == part_id.shape and chunk_id.shape[0] == keys.shape[0]
-    assert keys.shape[1] % chunk == 0, "pad streams to a chunk multiple"
-    assert fold in _vec.FOLDS, f"unknown fold {fold!r}; one of {_vec.FOLDS}"
-    if fold != "serial":
-        assert chunk & (chunk - 1) == 0, \
-            "vectorized folds need a power-of-two chunk (bitonic network)"
+    if keys.ndim != 2 or keys.shape != vals.shape:
+        raise ValueError(f"keys/vals must be matching 2-D streams, got "
+                         f"{keys.shape} vs {vals.shape}")
+    if chunk_id.shape != part_id.shape or chunk_id.shape[0] != keys.shape[0]:
+        raise ValueError("step tables must share shape and batch the streams")
+    if keys.shape[1] % chunk != 0:
+        raise ValueError("pad streams to a chunk multiple")
+    if fold not in _vec.FOLDS:
+        raise ValueError(f"unknown fold {fold!r}; one of {_vec.FOLDS}")
+    if fold != "serial" and chunk & (chunk - 1) != 0:
+        raise ValueError(
+            "vectorized folds need a power-of-two chunk (bitonic network)")
     B, cap_pad = keys.shape
     max_steps = chunk_id.shape[1]
 

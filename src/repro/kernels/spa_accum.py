@@ -87,12 +87,16 @@ def spa_accumulate_raw(keys: jax.Array, vals: jax.Array, *, m: int, n: int,
     require a power-of-two ``chunk`` and, for bit-identity with the
     canonical contract, a stream pre-sorted by key (stable).
     """
-    assert keys.shape == vals.shape and keys.ndim == 1
-    assert keys.shape[0] % chunk == 0, "pad inputs to a chunk multiple"
-    assert fold in _vec.FOLDS, f"unknown fold {fold!r}; one of {_vec.FOLDS}"
-    if fold != "serial":
-        assert chunk & (chunk - 1) == 0, \
-            "vectorized folds need a power-of-two chunk (bitonic network)"
+    if keys.shape != vals.shape or keys.ndim != 1:
+        raise ValueError(f"keys/vals must be matching 1-D streams, got "
+                         f"{keys.shape} vs {vals.shape}")
+    if keys.shape[0] % chunk != 0:
+        raise ValueError("pad inputs to a chunk multiple")
+    if fold not in _vec.FOLDS:
+        raise ValueError(f"unknown fold {fold!r}; one of {_vec.FOLDS}")
+    if fold != "serial" and chunk & (chunk - 1) != 0:
+        raise ValueError(
+            "vectorized folds need a power-of-two chunk (bitonic network)")
     parts = (m + block_rows - 1) // block_rows
     m_pad = parts * block_rows
     num_chunks = keys.shape[0] // chunk

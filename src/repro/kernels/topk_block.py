@@ -39,7 +39,9 @@ def topk_block_raw(x: jax.Array, *, k: int, block: int,
                    interpret: bool = True):
     """x: (nb*block,) -> (idx (nb*k,), val (nb*k,)); top-k by |value| per
     block."""
-    assert x.shape[0] % block == 0
+    if x.shape[0] % block != 0:
+        raise ValueError(f"input length {x.shape[0]} must be a multiple of "
+                         f"block {block}")
     nb = x.shape[0] // block
     kernel = functools.partial(_topk_kernel, block=block, k=k)
     idx, val = pl.pallas_call(

@@ -103,7 +103,8 @@ def bitonic_sort_chunk(keys: jax.Array, vals: jax.Array
     network is log²-depth; every layer is a reshaped vectorized select —
     no gathers, no data-dependent control flow."""
     n = keys.shape[0]
-    assert n & (n - 1) == 0, "bitonic sort needs a power-of-two chunk"
+    if n & (n - 1) != 0:
+        raise ValueError("bitonic sort needs a power-of-two chunk")
     idx = _iota(n)
     stages = n.bit_length() - 1
     for stage in range(1, stages + 1):

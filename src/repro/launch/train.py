@@ -24,6 +24,7 @@ is device-count agnostic).
 from __future__ import annotations
 
 import argparse
+import os
 
 import jax
 
@@ -35,7 +36,7 @@ from repro.data import make_batch
 from repro.models import build_model
 from repro.models.common import ShapeConfig, SHAPES
 from repro.optim import adamw_init
-from repro.runtime import Supervisor
+from repro.runtime import DeltaPublisher, DirTransport, Supervisor
 from repro.sharding import mesh_context
 from repro.sharding.params import (batch_shardings, ef_shardings,
                                    params_shardings)
@@ -64,6 +65,20 @@ def main():
     ap.add_argument("--model-reduce", default="reduce_scatter",
                     choices=["reduce_scatter", "psum"],
                     help="how TP-partial gradients combine over 'model'")
+    ap.add_argument("--publish-deltas", default=None, metavar="DIR",
+                    help="spool dir: publish top-k sparse parameter deltas "
+                         "for serving replicas (runtime/delta_sync.py); "
+                         "serve.py consumes the same dir via --sync-spool")
+    ap.add_argument("--sync-every", type=int, default=1,
+                    help="publish a delta epoch every N train steps")
+    ap.add_argument("--sync-k-fraction", type=float, default=0.01,
+                    help="top-k fraction per leaf for delta sparsification "
+                         "(1.0 = lossless)")
+    ap.add_argument("--sync-window", type=int, default=16,
+                    help="resendable ring-buffer depth (epochs)")
+    ap.add_argument("--sync-ckpt-every", type=int, default=8,
+                    help="epochs between shadow checkpoints — the reload "
+                         "target of a beyond-bound subscriber")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -144,14 +159,37 @@ def main():
         save_on_signal(ckpt_dir,
                        lambda: (state_holder["step"], state_holder["state"]))
 
+        publisher = None
+        if args.publish_deltas:
+            publisher = DeltaPublisher(
+                state0[0], DirTransport(args.publish_deltas),
+                k_fraction=args.sync_k_fraction,
+                window_epochs=args.sync_window,
+                ckpt_dir=os.path.join(args.publish_deltas, "ckpt"),
+                checkpoint_every=args.sync_ckpt_every)
+
         def tracked_step(state, step):
             new_state = step_fn(state, step)
             state_holder["state"], state_holder["step"] = new_state, step + 1
+            if publisher is not None and (step + 1) % args.sync_every == 0:
+                # epochs are derived from the step so a supervisor replay
+                # after a restart re-publishes the same epoch numbers it
+                # already shipped — the ring/monotonicity check skips them
+                epoch = (step + 1) // args.sync_every
+                if epoch > publisher.epoch:
+                    stats = publisher.publish(new_state[0], epoch=epoch)
+                    if step % 10 == 0:
+                        print(f"delta-sync epoch {stats.epoch}: "
+                              f"{stats.bytes}B vs {stats.dense_bytes}B dense "
+                              f"({stats.selected} entries)", flush=True)
             return new_state
 
         state, steps = sup.run(state0, tracked_step, args.steps)
         print(f"finished at step {steps}; restarts={sup.restarts}, "
               f"stragglers={len(sup.monitor.flagged)}")
+        if publisher is not None:
+            print(f"delta-sync published {publisher.epoch} epochs to "
+                  f"{args.publish_deltas}", flush=True)
 
 
 if __name__ == "__main__":

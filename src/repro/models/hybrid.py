@@ -37,10 +37,12 @@ jax.tree_util.register_pytree_node(
 
 class HybridLM:
     def __init__(self, cfg: ModelConfig):
-        assert cfg.attn_every > 0
+        if cfg.attn_every <= 0:
+            raise ValueError("hybrid attn_every must be positive")
         self.cfg = cfg
-        assert cfg.n_layers % cfg.attn_every == 0, \
-            "hybrid n_layers must be a multiple of attn_every"
+        if cfg.n_layers % cfg.attn_every != 0:
+            raise ValueError(
+                "hybrid n_layers must be a multiple of attn_every")
         self.n_groups = cfg.n_layers // cfg.attn_every
 
     # ------------------------------------------------------------------

@@ -53,7 +53,8 @@ def apply_mrope(x: jax.Array, positions: jax.Array, sections, theta: float) -> j
     d = x.shape[-1]
     half = d // 2
     t_n, h_n, w_n = sections
-    assert t_n + h_n + w_n == half, "mrope sections must sum to head_dim/2"
+    if t_n + h_n + w_n != half:
+        raise ValueError("mrope sections must sum to head_dim/2")
     freqs = rope_freqs(d, theta)                       # (D/2,)
     owner = jnp.concatenate([
         jnp.zeros((t_n,), jnp.int32),

@@ -64,7 +64,9 @@ def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
     z = zxbcdt[..., :di]
     xBC = zxbcdt[..., di:di + _conv_dim(cfg)]
     dt = zxbcdt[..., di + _conv_dim(cfg):]
-    assert dt.shape[-1] == H
+    if dt.shape[-1] != H:
+        raise ValueError(f"dt trailing dim {dt.shape[-1]} must equal the "
+                         f"head count {H}")
     return z, xBC, dt
 
 

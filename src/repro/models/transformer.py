@@ -423,7 +423,8 @@ def chunked_ce(x: jax.Array, head: jax.Array, labels: jax.Array,
     B, S, d = x.shape
     n = max(1, S // chunk)
     chunk = S // n
-    assert S % chunk == 0, "seq len must divide ce chunk count"
+    if S % chunk != 0:
+        raise ValueError("seq len must divide ce chunk count")
     xc = x.reshape(B, n, chunk, d).swapaxes(0, 1)        # (n, B, c, d)
     lc = labels.reshape(B, n, chunk).swapaxes(0, 1)      # (n, B, c)
 

@@ -24,8 +24,10 @@ Regression gate
 :data:`TRACKED_ORACLES` names the metric families whose value is a *claim*
 (all lower-is-better): the one-pass grid's modeled chunk loads
 (``benchmarks/spkadd_io``), the vec fold's serial-store counts
-(``benchmarks/table34_algorithms``), and the sparse-allreduce collective
-bytes (``benchmarks/sparse_allreduce_bytes``). For each tracked series —
+(``benchmarks/table34_algorithms``), the sparse-allreduce collective
+bytes (``benchmarks/sparse_allreduce_bytes``), and the delta-sync chaos
+soak's wire bytes per sync epoch + worst catch-up SpKAdd window
+(``benchmarks/delta_sync``). For each tracked series —
 same (backend, suite, geometry, record name) — the rolling baseline is the
 median of up to ``window`` prior values; the newest value regresses when it
 exceeds ``baseline * (1 + rel_tol)``. A series with no prior entries passes
@@ -50,6 +52,8 @@ TRACKED_ORACLES: Tuple[str, ...] = (
     "smoke/serial_stores",      # table34: serial-fold store count
     "smoke/sort_fold_stores",   # table34: vec sort-fold store count
     "allreduce*coll_bytes",     # sparse_allreduce: per-step collective bytes
+    "chaos/*/bytes_per_sync",       # delta_sync: wire bytes per sync epoch
+    "chaos/*/catchup_window_max",   # delta_sync: worst catch-up SpKAdd k
 )
 
 

@@ -17,22 +17,18 @@ import logging
 import time
 from typing import Callable, Optional
 
+import numpy as np
+
 from repro.checkpoint import (latest_step, restore_checkpoint,
                               save_checkpoint, AsyncCheckpointer)
+# FailureInjector moved to runtime/faults.py (the general fault-injection
+# home, alongside the delta-sync transport chaos); re-exported here for
+# back-compat with existing callers/tests.
+from repro.runtime.faults import FailureInjector, backoff_delay
 
 log = logging.getLogger("repro.runtime")
 
-
-class FailureInjector:
-    """Deterministic fault injection: raise at the given steps (once each)."""
-
-    def __init__(self, fail_at_steps=()):
-        self.remaining = set(fail_at_steps)
-
-    def maybe_fail(self, step: int):
-        if step in self.remaining:
-            self.remaining.discard(step)
-            raise RuntimeError(f"injected node failure at step {step}")
+__all__ = ["Supervisor", "StragglerMonitor", "FailureInjector"]
 
 
 class StragglerMonitor:
@@ -65,7 +61,13 @@ class Supervisor:
 
     def __init__(self, ckpt_dir: str, *, ckpt_every: int = 50,
                  max_restarts: int = 10, async_ckpt: bool = False,
-                 injector: Optional[FailureInjector] = None):
+                 injector: Optional[FailureInjector] = None,
+                 restart_backoff_base: float = 0.05,
+                 restart_backoff_cap: float = 5.0,
+                 restart_backoff_jitter: float = 0.5,
+                 seed: int = 0, sleep_fn: Callable[[float], None] = time.sleep):
+        if restart_backoff_base < 0 or restart_backoff_cap < 0:
+            raise ValueError("restart backoff base/cap must be >= 0")
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
         self.max_restarts = max_restarts
@@ -73,6 +75,12 @@ class Supervisor:
         self.monitor = StragglerMonitor()
         self.async_ckpt = AsyncCheckpointer(ckpt_dir) if async_ckpt else None
         self.restarts = 0
+        self.restart_backoff_base = restart_backoff_base
+        self.restart_backoff_cap = restart_backoff_cap
+        self.restart_backoff_jitter = restart_backoff_jitter
+        self.backoff_slept = 0.0  # cumulative restart backoff (observable)
+        self._rng = np.random.default_rng(seed)
+        self._sleep_fn = sleep_fn
 
     def _save(self, step: int, state):
         if self.async_ckpt:
@@ -105,8 +113,21 @@ class Supervisor:
                 self.restarts += 1
                 if self.restarts > self.max_restarts:
                     raise
+                # capped exponential backoff + jitter before the replay: a
+                # persistent fault (bad host, poisoned input) must not spin
+                # the restart loop hot, and jitter decorrelates hosts that
+                # all tripped on the same step
+                delay = backoff_delay(self.restarts - 1,
+                                      base=self.restart_backoff_base,
+                                      cap=self.restart_backoff_cap,
+                                      jitter=self.restart_backoff_jitter,
+                                      rng=self._rng)
+                self.backoff_slept += delay
+                if delay > 0:
+                    self._sleep_fn(delay)
                 log.warning("step %d failed (%s); restarting from latest "
-                            "checkpoint (restart %d)", step, e, self.restarts)
+                            "checkpoint (restart %d, backoff %.3fs)",
+                            step, e, self.restarts, delay)
                 last = latest_step(self.ckpt_dir)
                 if last is None:
                     state, step = init_state, 0

@@ -89,6 +89,27 @@ def test_spk105_host_nondeterminism_fires_in_traced_dirs_only():
     assert rules_of(ast_rules.scan_source(rnd, "models/foo.py")) == ["SPK105"]
 
 
+def test_spk106_bare_assert_fires_anywhere_in_src():
+    src = "def f(x):\n    assert x > 0, 'bad'\n    return x\n"
+    for rel in ("core/engine.py", "kernels/foo.py", "runtime/delta_sync.py"):
+        fs = ast_rules.scan_source(src, rel)
+        assert rules_of(fs) == ["SPK106"], rel
+        assert fs[0].line == 2 and "python -O" in fs[0].message
+
+
+def test_spk106_silent_on_raise_twin_and_waivable():
+    good = ("def f(x):\n"
+            "    if not x > 0:\n"
+            "        raise ValueError('bad')\n"
+            "    return x\n")
+    assert ast_rules.scan_source(good, "core/engine.py") == []
+    waived = ("def f(x):\n"
+              "    assert x > 0  # spkaddlint: disable=SPK106\n")
+    fs = ast_rules.scan_source(waived, "core/engine.py")
+    assert rules_of(fs) == ["SPK106"] and fs[0].waived
+    assert F.active(fs) == []
+
+
 def test_syntax_error_is_its_own_finding():
     fs = ast_rules.scan_source("def broken(:\n", "core/foo.py")
     assert rules_of(fs) == ["SPK101"] and "does not parse" in fs[0].message
@@ -316,7 +337,9 @@ def test_missing_baselines_empty_once_families_observed():
         "records": [{"name": "io/64x8/onepass_loads", "value": 3.0},
                     {"name": "smoke/serial_stores", "value": 10.0},
                     {"name": "smoke/sort_fold_stores", "value": 4.0},
-                    {"name": "allreduce/p4/coll_bytes", "value": 128.0}],
+                    {"name": "allreduce/p4/coll_bytes", "value": 128.0},
+                    {"name": "chaos/ef/bytes_per_sync", "value": 700.0},
+                    {"name": "chaos/ef/catchup_window_max", "value": 4.0}],
     }]
     assert ledger.missing_baselines(entries) == []
 

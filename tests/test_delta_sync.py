@@ -1,0 +1,383 @@
+"""Delta-sync protocol: frame codec, transports, publisher/subscriber
+invariants, chaos wire, staleness ladder, shared backoff policy."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import (DeltaFrame, DeltaPublisher, DeltaSubscriber,
+                           DirTransport, FailureInjector, FaultSpec,
+                           FaultyTransport, InProcTransport, Supervisor,
+                           backoff_delay, decode_frame, dense_sync_bytes,
+                           encode_frame, frame_epoch)
+from repro.runtime.delta_sync import CorruptFrameError, apply_delta_flat
+
+GRID = 2.0 ** -10  # dyadic update quantum: every fp32 sum below 2^13 exact
+
+SHAPES = {"wq": (8, 6), "bias": (17,)}
+
+
+def grid_tree(rng, lo=-256, hi=256):
+    return {k: jnp.asarray(rng.integers(lo, hi, s).astype(np.float32) * GRID)
+            for k, s in SHAPES.items()}
+
+
+def tree_add(a, b):
+    return {k: a[k] + b[k] for k in a}
+
+
+def bitwise_equal(a, b):
+    return all(bool(jnp.all(jnp.asarray(a[k], jnp.float32)
+                            == jnp.asarray(b[k], jnp.float32))) for k in a)
+
+
+def make_frame(epoch=3, n=5, size=64):
+    rng = np.random.default_rng(0)
+    idx = np.sort(rng.choice(size, n, replace=False)).astype(np.int32)
+    val = rng.standard_normal(n).astype(np.float32)
+    return DeltaFrame(epoch, epoch - 1, "/wq", size, idx, val)
+
+
+# -- frame codec ------------------------------------------------------------
+
+def test_frame_roundtrip():
+    f = make_frame()
+    g = decode_frame(encode_frame(f))
+    assert (g.epoch, g.base_epoch, g.shard, g.size) == (3, 2, "/wq", 64)
+    np.testing.assert_array_equal(g.idx, f.idx)
+    np.testing.assert_array_equal(g.val, f.val)
+
+
+def test_frame_roundtrip_empty():
+    f = DeltaFrame(1, 0, "/bias", 17, np.zeros(0, np.int32),
+                   np.zeros(0, np.float32))
+    g = decode_frame(encode_frame(f))
+    assert g.idx.shape == (0,) and g.size == 17
+
+
+def test_frame_rejects_damage():
+    buf = encode_frame(make_frame())
+    with pytest.raises(CorruptFrameError):  # bad magic
+        decode_frame(b"XXXX" + buf[4:])
+    with pytest.raises(CorruptFrameError):  # unknown version
+        decode_frame(buf[:4] + bytes([99]) + buf[5:])
+    with pytest.raises(CorruptFrameError):  # truncated header
+        decode_frame(buf[:3])
+    with pytest.raises(CorruptFrameError):  # truncated payload
+        decode_frame(buf[:-5])
+    flipped = bytearray(buf)
+    flipped[-1] ^= 0xFF  # payload bit-flip -> checksum mismatch
+    with pytest.raises(CorruptFrameError):
+        decode_frame(bytes(flipped))
+
+
+def test_frame_rejects_out_of_range_index():
+    f = make_frame(size=64)
+    bad = DeltaFrame(f.epoch, f.base_epoch, f.shard, 4, f.idx, f.val)
+    with pytest.raises(CorruptFrameError):
+        decode_frame(encode_frame(bad))
+
+
+def test_frame_epoch_peek():
+    assert frame_epoch(encode_frame(make_frame(epoch=9))) == 9
+    assert frame_epoch(b"garbage") is None
+    assert frame_epoch(b"") is None
+
+
+def test_apply_delta_preserves_untouched_slots():
+    # the bitwise contract hinges on scatter-add leaving untouched slots
+    # bit-identical — including negative zero (-0.0 + 0.0 would flip it)
+    flat = jnp.asarray([-0.0, 1.0, 2.0], jnp.float32)
+    out = apply_delta_flat(flat, np.asarray([1], np.int32),
+                           np.asarray([0.5], np.float32))
+    assert np.signbit(np.asarray(out))[0]
+    assert float(out[1]) == 1.5 and float(out[2]) == 2.0
+    # sentinel index (== size) drops instead of wrapping/clamping
+    out2 = apply_delta_flat(flat, np.asarray([3], np.int32),
+                            np.asarray([99.0], np.float32))
+    np.testing.assert_array_equal(np.asarray(out2), np.asarray(flat))
+
+
+# -- publisher --------------------------------------------------------------
+
+def test_publisher_validates_args():
+    params = grid_tree(np.random.default_rng(0))
+    with pytest.raises(ValueError):
+        DeltaPublisher(params, InProcTransport(), k_fraction=0.0)
+    with pytest.raises(ValueError):
+        DeltaPublisher(params, InProcTransport(), window_epochs=0)
+
+
+def test_publisher_monotone_epoch_and_treedef():
+    rng = np.random.default_rng(0)
+    params = grid_tree(rng)
+    pub = DeltaPublisher(params, InProcTransport(), k_fraction=1.0)
+    pub.publish(tree_add(params, grid_tree(rng)), epoch=2)
+    with pytest.raises(ValueError):
+        pub.publish(params, epoch=2)  # not monotone
+    with pytest.raises(ValueError):
+        pub.publish({"other": jnp.zeros(3)})  # tree structure changed
+
+
+def test_publisher_ring_window():
+    rng = np.random.default_rng(0)
+    params = grid_tree(rng)
+    pub = DeltaPublisher(params, InProcTransport(), k_fraction=1.0,
+                         window_epochs=2)
+    for _ in range(4):
+        params = tree_add(params, grid_tree(rng))
+        pub.publish(params)
+    assert pub.frames_for(1) is None and pub.frames_for(2) is None
+    assert pub.frames_for(3) and pub.frames_for(4)
+
+
+# -- lossless + EF roundtrips ----------------------------------------------
+
+def test_lossless_roundtrip_bitwise():
+    rng = np.random.default_rng(1)
+    params = grid_tree(rng)
+    wire = InProcTransport()
+    pub = DeltaPublisher(params, wire, k_fraction=1.0)
+    sub = DeltaSubscriber(params, wire, sleep_fn=lambda _s: None)
+    for _ in range(3):
+        params = tree_add(params, grid_tree(rng))
+        pub.publish(params)
+        sub.sync()
+    assert sub.applied_epoch == 3
+    assert bitwise_equal(sub.params, pub.shadow_params())
+    assert bitwise_equal(sub.params, params)  # grid arithmetic is exact
+
+
+def test_ef_sparse_tracks_shadow_and_bounds_error():
+    rng = np.random.default_rng(2)
+    params = grid_tree(rng)
+    wire = InProcTransport()
+    pub = DeltaPublisher(params, wire, k_fraction=0.05)
+    sub = DeltaSubscriber(params, wire, sleep_fn=lambda _s: None)
+    stats = []
+    for _ in range(4):
+        params = tree_add(params, grid_tree(rng))
+        stats.append(pub.publish(params))
+        sub.sync()
+    # protocol invariant: bitwise on the shadow trajectory at any k
+    assert bitwise_equal(sub.params, pub.shadow_params())
+    # error vs true params is exactly the EF residual mass
+    bound = max(float(jnp.max(jnp.abs(r))) for r in pub._residual)
+    err = max(float(jnp.max(jnp.abs(sub.params[k] - params[k])))
+              for k in params)
+    assert err <= bound + 1e-6
+    # and the wire moved less than a full-checkpoint ship
+    assert all(s.bytes < s.dense_bytes for s in stats)
+    assert dense_sync_bytes(params) == stats[-1].dense_bytes
+
+
+def test_catchup_folds_window_in_one_call():
+    rng = np.random.default_rng(3)
+    params = grid_tree(rng)
+    wire = InProcTransport()
+    pub = DeltaPublisher(params, wire, k_fraction=1.0)
+    sub = DeltaSubscriber(params, wire, max_staleness=8,
+                          sleep_fn=lambda _s: None)
+    for _ in range(4):
+        params = tree_add(params, grid_tree(rng))
+        pub.publish(params)
+    report = sub.sync()
+    assert report.window == 4 and report.applied_epoch == 4
+    assert not report.degraded and report.retries == 0
+    assert bitwise_equal(sub.params, params)
+    # quiescent wire: the next round is a no-op
+    again = sub.sync()
+    assert again.window == 0 and again.staleness == 0
+
+
+# -- chaos wire -------------------------------------------------------------
+
+CHAOS = dict(drop_p=0.2, dup_p=0.1, corrupt_p=0.1, seed=5)
+
+
+def run_chaos_cell(seed=5, epochs=6):
+    rng = np.random.default_rng(seed)
+    params = grid_tree(rng)
+    wire = FaultyTransport(InProcTransport(), FaultSpec(**{**CHAOS,
+                                                           "seed": seed}))
+    pub = DeltaPublisher(params, wire, k_fraction=1.0,
+                         window_epochs=epochs + 1)
+    sub = DeltaSubscriber(params, wire, max_staleness=epochs,
+                          seed=seed, sleep_fn=lambda _s: None)
+    for _ in range(epochs):
+        params = tree_add(params, grid_tree(rng))
+        pub.publish(params)
+        sub.sync()
+    rounds = 0
+    while sub.applied_epoch < pub.epoch and rounds < 6:
+        sub.sync(hint_epoch=pub.epoch)
+        rounds += 1
+    return params, pub, sub, wire
+
+
+def test_chaos_converges_bitwise():
+    params, pub, sub, wire = run_chaos_cell()
+    assert sub.applied_epoch == pub.epoch
+    assert bitwise_equal(sub.params, pub.shadow_params())
+    assert bitwise_equal(sub.params, params)
+    assert sub.degradations == 0
+    assert wire.injected["drop"] > 0 and wire.injected["corrupt"] > 0
+
+
+def test_chaos_is_seed_deterministic():
+    _, _, sub_a, wire_a = run_chaos_cell(seed=5)
+    _, _, sub_b, wire_b = run_chaos_cell(seed=5)
+    assert dict(wire_a.injected) == dict(wire_b.injected)
+    assert sub_a.total_retries == sub_b.total_retries
+
+
+def test_stall_released_and_recovered():
+    rng = np.random.default_rng(6)
+    params = grid_tree(rng)
+    wire = FaultyTransport(InProcTransport(),
+                           FaultSpec(stall_epochs=(2,),
+                                     stall_release_after=2, seed=6))
+    pub = DeltaPublisher(params, wire, k_fraction=1.0)
+    sub = DeltaSubscriber(params, wire, max_staleness=8, seed=6,
+                          sleep_fn=lambda _s: None)
+    for _ in range(4):
+        params = tree_add(params, grid_tree(rng))
+        pub.publish(params)
+    # epoch 2 stalled until epoch 4's send released it; everything arrives
+    sub.sync()
+    assert wire.injected["stall"] > 0
+    assert sub.applied_epoch == 4
+    assert bitwise_equal(sub.params, params)
+
+
+def test_hint_epoch_chases_fully_dropped_terminal():
+    rng = np.random.default_rng(7)
+    params = grid_tree(rng)
+    wire = InProcTransport()
+    pub = DeltaPublisher(params, wire, k_fraction=1.0)
+    params = tree_add(params, grid_tree(rng))
+    pub.publish(params)
+    wire.poll()  # the network ate every frame of epoch 1
+    sub = DeltaSubscriber(params, wire, sleep_fn=lambda _s: None)
+    sub._flat = [jnp.zeros_like(f) for f in sub._flat]
+    # no wire evidence -> no-op; the hint makes the hole chaseable
+    assert sub.sync().window == 0
+    report = sub.sync(hint_epoch=pub.epoch)
+    assert report.retries >= 1 and report.applied_epoch == 1
+
+
+# -- degradation ladder -----------------------------------------------------
+
+def test_degrade_reloads_exactly_once(tmp_path):
+    rng = np.random.default_rng(8)
+    params = grid_tree(rng)
+    wire = InProcTransport()
+    pub = DeltaPublisher(params, wire, k_fraction=1.0, window_epochs=16,
+                         ckpt_dir=str(tmp_path), checkpoint_every=3)
+    sub = DeltaSubscriber(params, wire, max_staleness=2,
+                          ckpt_dir=str(tmp_path), sleep_fn=lambda _s: None)
+    for _ in range(7):  # replica sleeps through all of them
+        params = tree_add(params, grid_tree(rng))
+        pub.publish(params)
+    wake = sub.sync()
+    assert wake.degraded and sub.degradations == 1
+    assert sub.applied_epoch == 7  # reload to ckpt 6 + fold epoch 7
+    assert bitwise_equal(sub.params, pub.shadow_params())
+    # tracking from here on: no further degradations
+    for _ in range(2):
+        params = tree_add(params, grid_tree(rng))
+        pub.publish(params)
+        sub.sync()
+    assert sub.degradations == 1 and sub.applied_epoch == 9
+
+
+def test_bound_exceeded_falls_back_to_fold():
+    rng = np.random.default_rng(9)
+    params = grid_tree(rng)
+    wire = InProcTransport()
+    pub = DeltaPublisher(params, wire, k_fraction=1.0, window_epochs=16)
+    sub = DeltaSubscriber(params, wire, max_staleness=2,
+                          sleep_fn=lambda _s: None)  # no ckpt_dir
+    for _ in range(6):
+        params = tree_add(params, grid_tree(rng))
+        pub.publish(params)
+    report = sub.sync()
+    assert not report.degraded and sub.bound_exceeded == 1
+    assert report.window == 6 and bitwise_equal(sub.params, params)
+
+
+# -- DirTransport -----------------------------------------------------------
+
+def test_dir_transport_roundtrip_prune_resume(tmp_path):
+    root = str(tmp_path)
+    tx = DirTransport(root)
+    bufs = [encode_frame(make_frame(epoch=e)) for e in (1, 2, 3)]
+    for b in bufs:
+        tx.send(b)
+    assert not any(n.endswith(".tmp")
+                   for n in os.listdir(tx.frames_dir))  # atomic writes
+    rx = DirTransport(root)  # a separate subscriber-side instance
+    got = rx.poll()
+    assert [frame_epoch(b) for b in got] == [1, 2, 3]
+    assert rx.poll() == []  # seen-set: no redelivery
+    assert tx.prune_below(3) == 2
+    assert [frame_epoch(b) for b in DirTransport(root).poll()] == [3]
+    # sequence numbers resume past existing files (no collisions)
+    tx2 = DirTransport(root)
+    tx2.send(bufs[0])
+    names = sorted(os.listdir(tx2.frames_dir))
+    assert len(names) == len(set(names)) == 2
+
+
+def test_dir_transport_end_to_end(tmp_path):
+    rng = np.random.default_rng(10)
+    params = grid_tree(rng)
+    pub = DeltaPublisher(params, DirTransport(str(tmp_path)), k_fraction=1.0)
+    sub = DeltaSubscriber(params, DirTransport(str(tmp_path)),
+                          sleep_fn=lambda _s: None)
+    for _ in range(3):
+        params = tree_add(params, grid_tree(rng))
+        pub.publish(params)
+        sub.sync()
+    assert sub.applied_epoch == 3
+    assert bitwise_equal(sub.params, params)
+
+
+# -- shared backoff policy --------------------------------------------------
+
+def test_backoff_delay_caps_and_jitters():
+    rng = np.random.default_rng(0)
+    flat = [backoff_delay(a, base=0.1, cap=0.4, jitter=0.0, rng=rng)
+            for a in range(5)]
+    assert flat == [0.1, 0.2, 0.4, 0.4, 0.4]  # doubled then capped
+    for _ in range(50):
+        d = backoff_delay(3, base=0.1, cap=0.4, jitter=0.5, rng=rng)
+        assert 0.2 <= d <= 0.6  # cap * (1 +/- jitter)
+    with pytest.raises(ValueError):
+        backoff_delay(0, base=-1.0, cap=1.0, jitter=0.0, rng=rng)
+    with pytest.raises(ValueError):
+        backoff_delay(0, base=0.1, cap=1.0, jitter=1.5, rng=rng)
+
+
+def test_faultspec_validates():
+    with pytest.raises(ValueError):
+        FaultyTransport(InProcTransport(), FaultSpec(drop_p=1.5))
+    with pytest.raises(ValueError):
+        FaultyTransport(InProcTransport(), FaultSpec(stall_release_after=0))
+
+
+def test_supervisor_restart_backoff(tmp_path):
+    slept = []
+    sup = Supervisor(str(tmp_path), ckpt_every=2, max_restarts=5,
+                     injector=FailureInjector(fail_at_steps=(1, 3)),
+                     restart_backoff_base=0.1, restart_backoff_cap=0.4,
+                     restart_backoff_jitter=0.5, seed=0,
+                     sleep_fn=slept.append)
+    state, steps = sup.run([0.0], lambda s, i: [s[0] + 1.0], n_steps=6)
+    assert steps == 6 and state[0] == 6.0 and sup.restarts == 2
+    assert len(slept) == 2
+    for i, d in enumerate(slept):
+        nominal = min(0.4, 0.1 * 2.0 ** i)
+        assert 0.5 * nominal <= d <= 1.5 * nominal
+    assert sup.backoff_slept == pytest.approx(sum(slept))

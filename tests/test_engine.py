@@ -327,7 +327,7 @@ def test_batched_pallas_regimes_run_natively(algorithm):
 def test_stack_collections_validates():
     a, _ = random_collection(1, 2, 16, 4, 8)
     b, _ = random_collection(2, 2, 16, 8, 8)  # different shape
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         E.stack_collections([a, b])
 
 

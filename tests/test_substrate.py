@@ -1,6 +1,10 @@
 """Training substrate: optimizer, checkpoint/restore, elastic reshard,
 supervisor fault tolerance, data determinism."""
 import os
+import queue
+import subprocess
+import sys
+import textwrap
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +75,49 @@ def test_checkpoint_incomplete_invisible(tmp_path):
     assert latest_step(str(tmp_path)) == 3
 
 
+def test_checkpoint_atomic_on_crash(tmp_path):
+    """A crash mid-write must leave only a .tmp dir — never a torn final
+    checkpoint — and a clean re-save of the same step must fully recover."""
+    tree = {"a": jnp.arange(6.0), "b": jnp.ones((2, 3))}
+    save_checkpoint(str(tmp_path), 1, tree)
+
+    real_save = np.save
+    calls = {"n": 0}
+
+    def crashing_save(path, arr):
+        calls["n"] += 1
+        if calls["n"] == 2:  # die on the second leaf
+            raise OSError("disk vanished")
+        real_save(path, arr)
+
+    np.save = crashing_save
+    try:
+        with pytest.raises(OSError):
+            save_checkpoint(str(tmp_path), 5, tree)
+    finally:
+        np.save = real_save
+
+    # the crashed attempt is invisible: only the .tmp carcass exists
+    assert latest_step(str(tmp_path)) == 1
+    assert not os.path.isdir(tmp_path / "step_00000005")
+    assert os.path.isdir(tmp_path / "step_00000005.tmp")
+
+    # a retry replaces the carcass wholesale and restores bit-exact
+    save_checkpoint(str(tmp_path), 5, tree)
+    assert latest_step(str(tmp_path)) == 5
+    assert not os.path.isdir(tmp_path / "step_00000005.tmp")
+    restored = restore_checkpoint(str(tmp_path), 5, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_step_ignores_foreign_entries(tmp_path):
+    save_checkpoint(str(tmp_path), 2, {"x": jnp.zeros(2)})
+    os.makedirs(tmp_path / "step_00000009.tmp")  # crashed attempt
+    os.makedirs(tmp_path / "step_junk")          # unparseable name
+    assert latest_step(str(tmp_path)) == 2
+
+
 def test_async_checkpointer(tmp_path):
     model = build_model(CFG)
     params = model.init(jax.random.PRNGKey(0))
@@ -79,6 +126,59 @@ def test_async_checkpointer(tmp_path):
     ck.save(2, params)
     ck.close()
     assert latest_step(str(tmp_path)) == 2
+
+
+def test_async_checkpointer_drain_race(tmp_path):
+    """queue.Full followed by the worker dequeuing before our get_nowait:
+    the drop-stale-entry path must swallow queue.Empty, not leak it."""
+    ck = AsyncCheckpointer(str(tmp_path))
+    real_q = ck._q
+
+    class RacyQueue:
+        def __init__(self):
+            self.full_once = True
+
+        def put_nowait(self, item):
+            if self.full_once:
+                self.full_once = False
+                raise queue.Full
+            real_q.put_nowait(item)
+
+        def get_nowait(self):
+            raise queue.Empty  # worker beat us to the dequeue
+
+    ck._q = RacyQueue()
+    ck.save(1, {"x": jnp.ones(3)})  # must not raise queue.Empty
+    ck._q = real_q
+    ck.close()
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_save_on_signal_sigterm(tmp_path):
+    """Preemption hook: SIGTERM writes a final checkpoint, then the process
+    dies by the default signal disposition (so schedulers see a clean kill)."""
+    code = textwrap.dedent("""
+        import os, signal, sys
+        import jax.numpy as jnp
+        from repro.checkpoint import save_on_signal
+        save_on_signal(sys.argv[1], lambda: (7, {"w": jnp.arange(4.0)}))
+        os.kill(os.getpid(), signal.SIGTERM)
+        print("unreachable")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+    ) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code, str(tmp_path)],
+                          env=env, capture_output=True, text=True,
+                          timeout=300)
+    import signal as _signal
+    assert proc.returncode == -_signal.SIGTERM, proc.stderr
+    assert "unreachable" not in proc.stdout
+    assert latest_step(str(tmp_path)) == 7
+    like = {"w": jnp.zeros(4)}
+    out = restore_checkpoint(str(tmp_path), 7, like)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(4.0))
 
 
 def test_supervisor_recovers_from_failures(tmp_path):
@@ -118,6 +218,29 @@ def test_straggler_monitor():
     assert mon.record(10, 0.5) is True
     assert mon.record(11, 0.11) is False
     assert len(mon.flagged) == 1
+
+
+def test_straggler_monitor_warmup():
+    """Fewer than 8 samples: no median worth trusting, never flags —
+    even a 1000x outlier during warm-up stays quiet."""
+    mon = StragglerMonitor(window=16, threshold=2.0)
+    for i in range(7):
+        assert mon.record(i, 100.0 if i == 3 else 0.1) is False
+    assert mon.flagged == []
+
+
+def test_straggler_monitor_threshold_boundary():
+    """The trip condition is strict: exactly threshold x median passes,
+    anything beyond flags."""
+    at = StragglerMonitor(window=16, threshold=2.0)
+    over = StragglerMonitor(window=16, threshold=2.0)
+    for i in range(8):
+        at.record(i, 0.1)
+        over.record(i, 0.1)
+    med = sorted(at.times)[len(at.times) // 2]
+    assert at.record(8, 2.0 * med) is False
+    assert over.record(8, 2.0 * med * 1.01) is True
+    assert over.flagged[0][0] == 8
 
 
 def test_data_determinism():
