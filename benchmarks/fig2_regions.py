@@ -1,16 +1,21 @@
 """Fig. 2 analogue: best-performing algorithm per (k, d) cell.
 
-The paper's finding: hash/sliding-hash (here: spa/sorted — the TPU-native
-one-touch accumulators) win everywhere for ER; 2-way tree only competes at
-very small k on skewed (RMAT) inputs.
+The paper's finding: hash/sliding-hash win everywhere for ER; 2-way tree
+only competes at very small k on skewed (RMAT) inputs. ``--with-hash`` adds
+the production sort-free sliding-hash engine path to the measured
+candidates (off by default: per-element probing under ``interpret=True`` is
+orders of magnitude slower than compiled, so timing it only makes sense on
+a real accelerator image).
 
 With ``--dump-cost-model PATH`` the measured per-cell winners calibrate the
 regime engine's dispatch table (``repro.core.engine``): the boundary between
-the tree / SPA / vec / merge regions is re-fit to the current hardware
-(including ``vec_min_density``, the lane-parallel accumulator's region) and
-dumped as JSON that ``engine.load_cost_model`` (and thus ``spkadd_auto``)
-consumes — drop the file into ``src/repro/configs/cost_model_default.json``
-or point ``$SPKADD_COST_MODEL`` at it and every dispatch picks it up.
+the tree / SPA / vec / hash / merge regions is re-fit to the current
+hardware — cells carry (k, density, compression) triples so the calibration
+learns ``hash_max_compression``, the sort-free region's boundary, alongside
+``vec_min_density`` — and dumped as JSON that ``engine.load_cost_model``
+(and thus ``spkadd_auto``) consumes. Drop the file into
+``src/repro/configs/cost_model_default.json`` or point
+``$SPKADD_COST_MODEL`` at it and every dispatch picks it up.
 """
 from __future__ import annotations
 
@@ -25,6 +30,12 @@ from repro.core.spkadd import spkadd
 
 ALGOS = ["incremental", "tree", "sorted", "spa", "vec"]
 
+#: regimes whose dispatch disagreement is cosmetic: all of them honor the
+#: canonical contract and sit in the same k-way performance family (the
+#: sort-free hash path included — it trades the sort for probes, not the
+#: output)
+SAME_FAMILY = {"spa", "blocked_spa", "vec", "sorted", "hash"}
+
 
 def _cell_signals(k: int, d: int, m: int, n: int) -> engine.RegimeSignals:
     """The engine's (static, capacity-based) signals for a grid cell —
@@ -37,9 +48,10 @@ def _cell_signals(k: int, d: int, m: int, n: int) -> engine.RegimeSignals:
         compression=engine.estimate_compression(total, mn), accum_elems=mn)
 
 
-def main(m=1024, n=16, dump_cost_model_path: str | None = None):
-    # ((k, aggregate density), winner) pairs — the engine's signal axes.
-    # A list, not a dict: er and rmat measure the same (k, density) cells
+def main(m=1024, n=16, dump_cost_model_path: str | None = None,
+         with_hash: bool = False):
+    # ((k, aggregate density, compression), winner) triples — the engine's
+    # signal axes. A list, not a dict: er and rmat measure the same cells
     # and both winners must reach the calibration.
     cells = []
     for kind in ("er", "rmat"):
@@ -53,11 +65,18 @@ def main(m=1024, n=16, dump_cost_model_path: str | None = None):
                     us = time_fn(fn, mats, iters=3)
                     if us < best_us:
                         best, best_us = alg, us
+                if with_hash:
+                    # the production engine path (geometry + sliding launch
+                    # + one compaction sort), not the faithful per-element
+                    # reference kernel in spkadd(algorithm="hash")
+                    us = time_fn(engine._run_hash, mats, iters=3)
+                    if us < best_us:
+                        best, best_us = "hash", us
                 grid[(k, d)] = best
-                cells.append(((k, k * d / m), best))
+                sig = _cell_signals(k, d, m, n)
+                cells.append(((k, sig.density, sig.compression), best))
                 emit(f"fig2_{kind}/best/k={k}/d={d}", best_us, best)
-        kway_wins = sum(1 for v in grid.values()
-                        if v in ("sorted", "spa", "vec"))
+        kway_wins = sum(1 for v in grid.values() if v in SAME_FAMILY)
         emit(f"fig2_{kind}/kway_win_fraction", 100.0 * kway_wins / len(grid),
              "paper: hash family wins almost all cells")
         # dispatch agreement: how often the engine's static table picks the
@@ -65,9 +84,8 @@ def main(m=1024, n=16, dump_cost_model_path: str | None = None):
         agree = 0
         for (k, d), winner in grid.items():
             picked = engine.select_algorithm(_cell_signals(k, d, m, n))
-            same_family = {"spa", "blocked_spa", "vec", "sorted"}
             agree += (picked == winner
-                      or (picked in same_family and winner in same_family))
+                      or (picked in SAME_FAMILY and winner in SAME_FAMILY))
         emit(f"fig2_{kind}/engine_dispatch_agreement",
              100.0 * agree / len(grid), "spkadd_auto vs measured winner")
     if dump_cost_model_path:
@@ -80,7 +98,11 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--m", type=int, default=1024)
     ap.add_argument("--n", type=int, default=16)
+    ap.add_argument("--with-hash", action="store_true",
+                    help="also time the sort-free sliding-hash engine path "
+                         "(slow under interpret mode; accelerator images)")
     ap.add_argument("--dump-cost-model", default=None,
                     help="write the calibrated dispatch table as JSON")
     args = ap.parse_args()
-    main(m=args.m, n=args.n, dump_cost_model_path=args.dump_cost_model)
+    main(m=args.m, n=args.n, dump_cost_model_path=args.dump_cost_model,
+         with_hash=args.with_hash)

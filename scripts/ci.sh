@@ -5,11 +5,21 @@
 # Usage: scripts/ci.sh [extra pytest args...]
 #        scripts/ci.sh static        # spkaddlint contract gate only
 #        scripts/ci.sh chaos         # fault-injection smoke lane only
+#        scripts/ci.sh nightly       # full (non-smoke) bench matrix + sweeps
 # Env:   RESULTS_DIR (default: results) — where BENCH_*.json artifacts land
+#        CI_SKIP_INSTALL=1 — skip pip install in EVERY lane (pre-baked image)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 RESULTS_DIR="${RESULTS_DIR:-results}"
+
+# One install guard for every lane: static/chaos/nightly used to `exec`
+# before this block, so CI_SKIP_INSTALL only governed the default lane and
+# the others paid (or flaked on) a pip run the job had already done.
+if [[ "${CI_SKIP_INSTALL:-0}" != "1" ]]; then
+    python -m pip install -r requirements.txt || \
+        echo "WARN: pip install failed (offline image?); running with baked-in deps"
+fi
 
 # Static lane: prove the kernel contracts (one-sort, index dtype, step
 # tables, VMEM budget, source discipline) without running a single kernel.
@@ -32,19 +42,36 @@ if [[ "${1:-}" == "chaos" ]]; then
         --results "$RESULTS_DIR"
 fi
 
-if [[ "${CI_SKIP_INSTALL:-0}" != "1" ]]; then
-    python -m pip install -r requirements.txt || \
-        echo "WARN: pip install failed (offline image?); running with baked-in deps"
+# Nightly lane (cron): the full non-smoke benchmark matrix — every suite at
+# its real shapes, not the tiny CI cells — plus the exhaustive hash property
+# sweep (high-collision keys, the load-factor boundary, all-duplicate
+# chunks) that is too slow for the per-push suite. Artifacts are folded into
+# the ledger without gating: full-matrix suites carry their own suite names
+# ("table34" vs "table34_smoke"), so they seed/extend their own series.
+if [[ "${1:-}" == "nightly" ]]; then
+    mkdir -p "$RESULTS_DIR"
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.table34_algorithms \
+        --json "$RESULTS_DIR/BENCH_table34_full.json"
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.spkadd_io \
+        --json "$RESULTS_DIR/BENCH_spkadd_io_full.json"
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.sparse_allreduce_bytes \
+        --mesh 8 --json "$RESULTS_DIR/BENCH_sparse_allreduce_full.json"
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.hash_accum \
+        --json "$RESULTS_DIR/BENCH_hash_accum_full.json"
+    SPKADD_NIGHTLY=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+        tests/test_hash_accum.py
+    exec python scripts/perf_fleet.py --append-only \
+        "$RESULTS_DIR"/BENCH_*_full.json --no-gate
 fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
 # Perf fleet: runs every benchmark smoke suite (table34 cross-regime gate,
-# sparse-allreduce traffic model, SpKAdd one-pass I/O oracle) with
-# observability on (SPKADD_OBS=1 -> trace_<suite>.jsonl span exports next
-# to the BENCH_*.json artifacts), folds the artifacts into the committed
-# results/history/ ledger, and fails the build if any tracked oracle
-# (chunk loads, serial stores, collective bytes) regresses beyond
-# tolerance vs the rolling baseline. `scripts/bench_report.py` renders
-# the resulting trajectory.
+# sparse-allreduce traffic model, SpKAdd one-pass I/O oracle, sliding-hash
+# insert/probe oracle) with observability on (SPKADD_OBS=1 ->
+# trace_<suite>.jsonl span exports next to the BENCH_*.json artifacts),
+# folds the artifacts into the committed results/history/ ledger, and fails
+# the build if any tracked oracle (chunk loads, serial stores, collective
+# bytes, hash insert loads / probe chains) regresses beyond tolerance vs
+# the rolling baseline. `scripts/bench_report.py` renders the trajectory.
 python scripts/perf_fleet.py --results "$RESULTS_DIR"

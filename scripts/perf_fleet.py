@@ -41,6 +41,7 @@ SUITES = {
                          "BENCH_sparse_allreduce.json"),
     "spkadd_io": ("benchmarks.spkadd_io", "BENCH_spkadd_io.json"),
     "delta_sync": ("benchmarks.delta_sync", "BENCH_delta_sync.json"),
+    "hash_accum": ("benchmarks.hash_accum", "BENCH_hash_accum.json"),
 }
 
 

@@ -22,6 +22,13 @@ Rule scoping is by repo-relative path under ``src/repro``:
   validating. Argument checks must raise ``ValueError``; a genuinely
   internal invariant may carry an inline waiver. Test files are exempt by
   construction (only ``src/repro`` is scanned).
+- SPK107 hash-table-discipline: scoped to :data:`HASH_KERNEL_PREFIX`
+  (``kernels/hash*.py``). (a) every ``jax.lax.while_loop`` — the probe
+  loops — must have a statically resolvable cond (local def or lambda)
+  containing a bound comparison, so probing provably terminates; (b) no
+  inline table-size doubling ``while``-loops outside the shared
+  ``hash_table_size`` helper, so the pow2 / load-factor <= 0.5 sizing rule
+  has exactly one implementation.
 """
 from __future__ import annotations
 
@@ -52,6 +59,13 @@ SORT_CALLS = {
 NONDET_PREFIXES = ("time.", "datetime.", "random.", "numpy.random.")
 
 SPAN_CALLS = {"repro.obs.span", "repro.obs.trace.span"}
+
+#: SPK107 scope: the hash-kernel family
+HASH_KERNEL_PREFIX = "kernels/hash"
+#: SPK107: the one sanctioned home of the table-sizing doubling loop
+HASH_SIZING_HELPER = "hash_table_size"
+#: dotted names of the traced while-loop primitive (probe loops)
+WHILE_LOOP_CALLS = {"jax.lax.while_loop"}
 
 
 def _alias_map(tree: ast.AST) -> Dict[str, str]:
@@ -143,6 +157,56 @@ def scan_source(source: str, rel: str) -> List[Finding]:
                  "bare `assert` — validation that vanishes under python -O",
                  "raise ValueError for argument validation; waive inline "
                  "(# spkaddlint: disable=SPK106) for internal invariants")
+
+    # SPK107: hash-kernel table discipline (kernels/hash*.py only)
+    if rel.startswith(HASH_KERNEL_PREFIX):
+        local_defs = {n.name: n for n in ast.walk(tree)
+                      if isinstance(n, ast.FunctionDef)}
+        _BOUND_OPS = (ast.Lt, ast.LtE, ast.Gt, ast.GtE)
+
+        def _has_bound_compare(fn: ast.AST) -> bool:
+            return any(isinstance(c, ast.Compare)
+                       and any(isinstance(op, _BOUND_OPS) for op in c.ops)
+                       for c in ast.walk(fn))
+
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                name = _dotted(node.func, aliases)
+                if name in WHILE_LOOP_CALLS and node.args:
+                    cond = node.args[0]
+                    target: Optional[ast.AST] = None
+                    if isinstance(cond, ast.Lambda):
+                        target = cond
+                    elif isinstance(cond, ast.Name):
+                        target = local_defs.get(cond.id)
+                    if target is None:
+                        emit("SPK107", node,
+                             "while_loop cond is not statically resolvable "
+                             "(local def or lambda) — the bounded-"
+                             "termination guard cannot be proven",
+                             "pass a locally defined cond carrying an "
+                             "explicit `steps < table_size` bound")
+                    elif not _has_bound_compare(target):
+                        emit("SPK107", node,
+                             "probe while_loop cond has no bounded-"
+                             "termination guard — an over-full table "
+                             "would probe forever",
+                             "carry a step counter in the loop state and "
+                             "bound the cond with `steps < table_size`")
+        helper = local_defs.get(HASH_SIZING_HELPER)
+        allowed_whiles = {id(n) for n in ast.walk(helper)
+                         if isinstance(n, ast.While)} if helper else set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.While) and id(node) not in allowed_whiles:
+                if any(isinstance(st, ast.AugAssign)
+                       and isinstance(st.op, ast.Mult)
+                       for st in ast.walk(node)):
+                    emit("SPK107", node,
+                         "inline table-size doubling loop — the pow2 / "
+                         f"load-factor sizing rule must live only in "
+                         f"{HASH_SIZING_HELPER}()",
+                         f"call {HASH_SIZING_HELPER}(distinct_bound) "
+                         "instead of sizing the table in place")
 
     # call-based rules share one walk
     with_context_calls = set()

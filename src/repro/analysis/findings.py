@@ -50,6 +50,12 @@ RULES: Dict[str, Rule] = {r.rule: r for r in [
          "no bare `assert` in src/repro — asserts vanish under `python -O`, "
          "so argument validation must raise ValueError (internal invariants "
          "may carry an inline waiver; test files are not scanned)"),
+    Rule("SPK107", "hash-table-discipline",
+         "hash kernels (kernels/hash*.py) size tables only through "
+         "hash_table_size (pow2, load factor <= 0.5 — no inline doubling "
+         "loops) and every probe while_loop cond carries a bounded-"
+         "termination guard (a comparison against the table size), so an "
+         "undersized table degrades to a bounded scan instead of a hang"),
     Rule("SPKJ201", "one-sort",
          "each engine entry point lowers to its regime's exact stable-sort "
          "count (1 for the partitioned regimes; max(1, k-1) for tree) — the "

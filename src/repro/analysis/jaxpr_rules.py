@@ -92,13 +92,19 @@ def index_dtype_findings(closed, label: str) -> List[Finding]:
 REGIME_FORCES = {
     "tree": {"tree_max_k": 1e9},
     "sorted": {"tree_max_k": 0, "spa_max_accum_elems": 0.0,
+               "hash_min_total_nnz": 1e18,
                "vec_max_accum_elems": 0.0,
                "blocked_spa_max_accum_elems": 0.0},
     "spa": {"tree_max_k": 0, "spa_max_accum_elems": float(1 << 40),
             "spa_min_density": 0.0, "spa_min_compression": 0.0},
+    "hash": {"tree_max_k": 0, "spa_max_accum_elems": 0.0,
+             "hash_min_total_nnz": 0.0, "hash_max_compression": 1e9,
+             "hash_max_table_elems": float(1 << 40)},
     "vec": {"tree_max_k": 0, "spa_max_accum_elems": 1.0,
+            "hash_min_total_nnz": 1e18,
             "vec_min_density": 0.0, "vec_max_accum_elems": float(1 << 40)},
     "blocked_spa": {"tree_max_k": 0, "spa_max_accum_elems": 1.0,
+                    "hash_min_total_nnz": 1e18,
                     "vec_max_accum_elems": 1.0,
                     "blocked_spa_min_density": 0.0,
                     "blocked_spa_max_accum_elems": float(1 << 40)},
@@ -107,8 +113,10 @@ REGIME_FORCES = {
 
 def expected_sorts(regime: str, k: int) -> int:
     """The one-sort invariant, per regime: the partitioned/sorted/spa
-    regimes share the single canonical-plan sort; the tree regime pays one
-    compress per 2-way add (k-1 of them, floored at the k=1 compress)."""
+    regimes share the single canonical-plan sort; the sort-free ``hash``
+    regime pays zero sorts before accumulation and exactly one at
+    compaction (so one total); the tree regime pays one compress per
+    2-way add (k-1 of them, floored at the k=1 compress)."""
     if regime == "tree":
         return max(1, k - 1)
     return 1
@@ -157,10 +165,11 @@ def geometry_matrix() -> Iterable[Tuple[str, Callable[[], object], int]]:
                        E.spkadd_auto(mats, cost_model=dict(force)),
                        expected_sorts(regime, k))
 
-    # batched: one vmapped sort for the whole stack
+    # batched: one vmapped sort for the whole stack (hash: the single
+    # batched compaction sort — still one)
     colls = [_collection(100 + b, 4, 32, 8, 24) for b in range(3)]
     stacked = E.stack_collections(colls)
-    for regime in ("vec", "blocked_spa"):
+    for regime in ("vec", "blocked_spa", "hash"):
         force = REGIME_FORCES[regime]
         yield (f"spkadd_batched[{regime},B=3]",
                lambda stacked=stacked, force=force:

@@ -43,6 +43,15 @@ input chunk is read exactly once (the paper's I/O lower bound, vs the
 legacy grid's ``parts × N``). ``sparse.sort_calls()`` counts the stable
 sorts; tests pin the count at one per engine call.
 
+**Sort-free hash regime.** The ``hash`` regime (the paper's Tables 3/4
+winner) goes further: the *unsorted* stream is accumulated directly into
+per-part VMEM hash tables (:mod:`repro.kernels.hash_slide`) and the single
+counted sort happens *after* accumulation, compacting the tables to the
+canonical layout — zero sorts before compaction (gauge
+``engine.hash.presort_sorts``), one sort total. It wins where sorting is
+wasted work: low compression factor, table fits fast memory (DESIGN.md
+§4.4).
+
 :func:`spkadd_batched` adds a *stack* of B collections (shared logical
 shape and capacities, independent sums) in one XLA program instead of a
 Python loop: pure-jnp regimes are vmapped, while a ``vec``/``blocked_spa``
@@ -66,7 +75,7 @@ import jax.numpy as jnp
 from repro import obs
 from repro.core.sparse import (CompressPlan, PaddedCOO, compress_plan, concat,
                                next_pow2, plan_and_partition, sentinel_key,
-                               with_capacity)
+                               sort_calls, stable_argsort, with_capacity)
 from repro.core import spkadd as _alg
 
 _log = logging.getLogger("repro.engine")
@@ -157,6 +166,15 @@ DEFAULT_COST_MODEL: Dict[str, float] = {
     # (vec_max_accum_elems = 0) or prices it out on density.
     "blocked_spa_max_accum_elems": float(1 << 26),
     "blocked_spa_min_density": 1.0 / 16.0,
+    # sort-free sliding-hash regime (paper Tables 3/4, the title's winner):
+    # pays zero sorts before compaction, so it beats the sort-paying family
+    # exactly where sorting is wasted — low compression factor (few
+    # duplicates to merge) — provided the stream is big enough for the
+    # table setup to amortize and the pow2 table at load factor <= 0.5
+    # (2 * next_pow2-of-distinct-bound slots) fits fast memory.
+    "hash_min_total_nnz": 512.0,
+    "hash_max_compression": 1.5,
+    "hash_max_table_elems": float(1 << 21),
 }
 
 #: Env var naming a JSON cost-model file (as written by
@@ -204,6 +222,12 @@ def select_algorithm(signals: RegimeSignals,
                       or signals.compression >= cm["spa_min_compression"])
     if signals.accum_elems <= cm["spa_max_accum_elems"] and spa_worthwhile:
         return "spa"
+    total = signals.density * signals.accum_elems
+    table_elems = next_pow2(2 * max(int(min(total, signals.accum_elems)), 1))
+    if (total >= cm["hash_min_total_nnz"]
+            and signals.compression <= cm["hash_max_compression"]
+            and table_elems <= cm["hash_max_table_elems"]):
+        return "hash"
     if (signals.accum_elems <= cm["vec_max_accum_elems"]
             and signals.density >= cm["vec_min_density"]):
         return "vec"
@@ -217,7 +241,8 @@ def calibrate_cost_model(cells) -> Dict[str, float]:
     """Fit region boundaries from measured per-cell winners.
 
     ``cells`` is an iterable of ``((k, aggregate_density), winner)`` pairs
-    (or an equivalent dict) as produced by ``benchmarks/fig2_regions.py``.
+    (or ``((k, aggregate_density, compression), winner)`` triples, or an
+    equivalent dict) as produced by ``benchmarks/fig2_regions.py``.
     Pairs, not a dict keyed on (k, density): the same cell measured on
     different sparsity patterns (ER vs RMAT) must contribute *both*
     winners, not have one silently overwrite the other. Boundaries not
@@ -225,16 +250,21 @@ def calibrate_cost_model(cells) -> Dict[str, float]:
     """
     items = list(cells.items()) if hasattr(cells, "items") else list(cells)
     cm = dict(DEFAULT_COST_MODEL)
-    tree_ks = [k for (k, _), alg in items if alg == "tree"]
+    tree_ks = [key[0] for key, alg in items if alg == "tree"]
     if tree_ks:
         cm["tree_max_k"] = max(tree_ks)
-    spa_ds = [d for (_, d), alg in items if alg in ("spa", "blocked_spa")]
+    spa_ds = [key[1] for key, alg in items if alg in ("spa", "blocked_spa")]
     if spa_ds:
         cm["spa_min_density"] = min(spa_ds)
         cm["blocked_spa_min_density"] = min(spa_ds)
-    vec_ds = [d for (_, d), alg in items if alg == "vec"]
+    vec_ds = [key[1] for key, alg in items if alg == "vec"]
     if vec_ds:
         cm["vec_min_density"] = min(vec_ds)
+    # hash vs vec is a compression-factor boundary, so hash cells carry cf
+    # as an optional third axis: ((k, density, cf), winner).
+    hash_cfs = [key[2] for key, alg in items if alg == "hash" and len(key) > 2]
+    if hash_cfs:
+        cm["hash_max_compression"] = max(hash_cfs)
     return cm
 
 
@@ -404,6 +434,82 @@ def _run_vec(mats: Sequence[PaddedCOO],
     return _run_partitioned(mats, "vec", cost_model=cost_model, **kw)
 
 
+def _hash_core(keys: jax.Array, vals: jax.Array, shape: Tuple[int, int],
+               vmem_budget_bytes: int, interpret: bool,
+               cost_model: Optional[Dict[str, float]]) -> PaddedCOO:
+    """The ONE sort-free sliding-hash pipeline over ``(B, cap)`` streams.
+
+    Unlike every other regime there is **no sort before accumulation**: the
+    unsorted concatenated stream goes straight into the sliding-hash Pallas
+    launch (``kernels/hash_slide``), which inserts-or-accumulates each
+    nonzero into per-part VMEM tables in stream order. Because slot values
+    start at f32 zero and duplicates add on top in stream order, the
+    per-key value is exactly the canonical left fold — so compacting the
+    tables (occupied slots sorted by key, sentinel padding, structural
+    ``nnz``) reproduces the canonical PaddedCOO bit-for-bit. That
+    compaction's ``stable_argsort`` is the single counted sort of a hash
+    dispatch; the ``engine.hash.presort_sorts`` gauge (pinned at zero)
+    certifies nothing sorted before the tables were built. Shared by the
+    single-collection regime (B = 1) and :func:`spkadd_batched`.
+    """
+    from repro.kernels import ops as kops  # kernels are optional deps
+
+    m, n = shape
+    B, cap = keys.shape
+    sent = sentinel_key(shape)
+    geom = kops.hash_launch_geometry(
+        cap, m=m, n=n, vmem_budget_bytes=vmem_budget_bytes)
+    obs.counter("engine.hash.launches").inc()
+    sorts_before = sort_calls()
+    with obs.span("engine.hash_launch", batch=B, cap=cap,
+                  table_size=geom.table_size, parts=geom.parts,
+                  part_span=geom.part_span, chunk=geom.chunk,
+                  num_chunks=geom.num_chunks):
+        tkeys, tvals = kops.hash_slide_tables(
+            keys, vals, m=m, n=n, table_size=geom.table_size,
+            part_span=geom.part_span, parts=geom.parts, chunk=geom.chunk,
+            interpret=interpret)
+    # the zero-presort pin: tables were built without any canonical sort
+    obs.gauge("engine.hash.presort_sorts").set(sort_calls() - sorts_before)
+
+    # compaction — the ONE stable sort of a hash dispatch. Part tables are
+    # key-range ordered, so a single batched argsort over the concatenated
+    # tables yields canonical order; the stable tie-break keeps sentinel
+    # (empty) slots behind every real key.
+    obs.counter("engine.hash.compaction_sorts").inc()
+    occupied = tkeys != -1
+    ck = jnp.where(occupied, tkeys, sent)
+    order = stable_argsort(ck)
+    ck_s = jnp.take_along_axis(ck, order, axis=-1)
+    cv_s = jnp.take_along_axis(tvals, order, axis=-1)
+    tab = ck.shape[-1]
+    if tab >= cap:
+        out_keys = ck_s[:, :cap]
+        out_f32 = cv_s[:, :cap]
+    else:
+        out_keys = jnp.concatenate(
+            [ck_s, jnp.full((B, cap - tab), sent, jnp.int32)], axis=-1)
+        out_f32 = jnp.concatenate(
+            [cv_s, jnp.zeros((B, cap - tab), jnp.float32)], axis=-1)
+    nnz = occupied.sum(axis=-1).astype(jnp.int32)
+    out_vals = jnp.where(out_keys != sent, out_f32, 0.0).astype(vals.dtype)
+    return PaddedCOO(keys=out_keys, vals=out_vals, nnz=nnz, shape=shape)
+
+
+def _run_hash(mats: Sequence[PaddedCOO],
+              cost_model: Optional[Dict[str, float]] = None,
+              vmem_budget_bytes: int = 16 * 1024 * 1024,
+              interpret: bool = True) -> PaddedCOO:
+    """Sort-free sliding-hash regime: zero sorts before compaction, one
+    stable sort total; output layout is canonical. Runs the shared core as
+    a B = 1 batch."""
+    cat = concat(mats)
+    out = _hash_core(cat.keys[None], cat.vals[None], cat.shape,
+                     vmem_budget_bytes, interpret, cost_model)
+    return PaddedCOO(keys=out.keys[0], vals=out.vals[0], nnz=out.nnz[0],
+                     shape=cat.shape)
+
+
 def _run_tree(mats: Sequence[PaddedCOO],
               cost_model: Optional[Dict[str, float]] = None) -> PaddedCOO:
     """Tiny-k regime, canonical-contract-preserving for *any* tree_max_k:
@@ -435,6 +541,7 @@ _CANONICAL = {
     "spa": _run_spa,
     "vec": _run_vec,
     "blocked_spa": _run_blocked_spa,
+    "hash": _run_hash,
 }
 
 
@@ -592,6 +699,13 @@ def spkadd_batched(stacked_mats: Sequence[PaddedCOO], *,
     if effective in ("blocked_spa", "vec"):
         return _run_partitioned_batched(stacked_mats, effective,
                                         cost_model=cost_model)
+    if effective == "hash":
+        # native batched sliding-hash launch (leading batch grid dimension);
+        # vmapping the B = 1 path would re-trace the Pallas call per batch
+        keys = jnp.concatenate([a.keys for a in stacked_mats], axis=-1)
+        vals = jnp.concatenate([a.vals for a in stacked_mats], axis=-1)
+        return _hash_core(keys, vals, stacked_mats[0].shape,
+                          16 * 1024 * 1024, True, cost_model)
 
     def one(mats):
         return _CANONICAL[effective](mats, cost_model=cost_model) \

@@ -28,23 +28,47 @@ from repro.compat import pallas as pl
 HASH_PRIME = 2654435761  # Knuth multiplicative constant
 
 
-def _probe(table_keys_ref, key: jax.Array, mask: jax.Array):
-    """Linear-probe for ``key``; returns the terminal slot (empty-or-match)."""
+def hash_table_size(distinct_bound: int) -> int:
+    """The ONE table-sizing rule every hash kernel shares (spkaddlint
+    SPK107): the smallest power of two ``>= 2 * distinct_bound``, so the
+    load factor can never exceed 0.5 and expected probes stay O(1).
+
+    ``distinct_bound`` is the worst-case distinct-key count the table must
+    absorb (stream capacity for the faithful kernel, ``min(cap, part_span)``
+    per part for the sliding kernel).
+    """
+    size = 1
+    while size < 2 * max(int(distinct_bound), 1):
+        size *= 2
+    return size
+
+
+def _probe(table_keys_ref, key: jax.Array, mask: jax.Array, *,
+           table_size: int):
+    """Linear-probe for ``key``; returns the terminal slot (empty-or-match).
+
+    The probe ``while_loop`` carries a step counter bounded by
+    ``table_size`` (spkaddlint SPK107): at load factor <= 0.5 the probe
+    chain always hits an empty slot first, but the bound makes termination
+    a static property rather than a sizing-discipline consequence — an
+    undersized table degrades to a bounded scan instead of a hang.
+    """
     prime = jnp.asarray(HASH_PRIME, jnp.uint32)
     h0 = ((key.astype(jnp.uint32) * prime) & mask).astype(jnp.int32)
 
     def cond(carry):
-        _, done = carry
-        return jnp.logical_not(done)
+        _, steps, done = carry
+        return jnp.logical_not(done) & (steps < table_size)
 
     def body(carry):
-        h, _ = carry
+        h, steps, _ = carry
         tk = pl.load(table_keys_ref, (h,))
         done = (tk == -1) | (tk == key)
         h_next = jnp.where(done, h, (h + 1) & mask.astype(jnp.int32))
-        return h_next, done
+        return h_next, steps + jnp.int32(1), done
 
-    h_final, _ = jax.lax.while_loop(cond, body, (h0, False))
+    h_final, _, _ = jax.lax.while_loop(cond, body,
+                                       (h0, jnp.int32(0), False))
     return h_final
 
 
@@ -60,7 +84,7 @@ def _hash_kernel(keys_ref, vals_ref, tkeys_ref, tvals_ref, *, nnz_cap: int,
 
         @pl.when(k != sent)
         def _do():
-            h = _probe(tkeys_ref, k, mask)
+            h = _probe(tkeys_ref, k, mask, table_size=table_size)
             pl.store(tkeys_ref, (h,), k)
             cur = pl.load(tvals_ref, (h,))
             pl.store(tvals_ref, (h,), cur + v)
@@ -80,9 +104,7 @@ def hash_accumulate_raw(keys: jax.Array, vals: jax.Array, *, sent: int,
                          f"{keys.shape} vs {vals.shape}")
     cap = keys.shape[0]
     if table_size is None:
-        table_size = 1
-        while table_size < 2 * (cap + 1):
-            table_size *= 2
+        table_size = hash_table_size(cap + 1)
     if table_size & (table_size - 1) != 0:
         raise ValueError("table size must be 2^q")
 
@@ -115,7 +137,7 @@ def _hash_symbolic_kernel(keys_ref, nz_ref, tkeys_ref, *, nnz_cap: int,
 
         @pl.when(k != sent)
         def _do():
-            h = _probe(tkeys_ref, k, mask)
+            h = _probe(tkeys_ref, k, mask, table_size=table_size)
             tk = pl.load(tkeys_ref, (h,))
 
             @pl.when(tk == -1)
@@ -134,9 +156,7 @@ def hash_symbolic_raw(keys: jax.Array, *, sent: int,
     """Distinct-key count via the faithful hash symbolic phase."""
     cap = keys.shape[0]
     if table_size is None:
-        table_size = 1
-        while table_size < 2 * (cap + 1):
-            table_size *= 2
+        table_size = hash_table_size(cap + 1)
 
     kernel = functools.partial(_hash_symbolic_kernel, nnz_cap=cap,
                                table_size=table_size, sent=sent)

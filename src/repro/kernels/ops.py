@@ -333,3 +333,93 @@ def hash_symbolic(keys: jax.Array, *, sent: int, table_size: int | None = None,
     """Faithful symbolic phase (distinct-key count)."""
     return _hash.hash_symbolic_raw(keys, sent=sent, table_size=table_size,
                                    interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# sort-free sliding-hash launch (kernels/hash_slide.py)
+# ---------------------------------------------------------------------------
+
+class HashGeometry(_t.NamedTuple):
+    """Static launch geometry of the sliding-hash grid — the single source
+    of truth shared by :func:`hash_slide_tables`, the engine, and the
+    probe/I-O oracle (``benchmarks/hash_accum.py``), so the oracle can
+    never drift from the kernel."""
+
+    table_size: int  # slots per part table (power of two, 8 B per slot)
+    parts: int       # number of key-range parts covering m*n
+    part_span: int   # key-range width owned by one part
+    chunk: int       # input chunk length (power of two)
+    num_chunks: int  # padded stream length / chunk
+
+
+def hash_launch_geometry(cap: int, *, m: int, n: int,
+                         vmem_budget_bytes: int = 16 * 1024 * 1024,
+                         chunk: int | None = None) -> HashGeometry:
+    """Geometry the sliding-hash launch uses for a ``cap``-long stream.
+
+    Same budgeting discipline as :func:`partitioned_launch_geometry`: the
+    double-buffered input blocks get at most half the budget (``chunk``
+    halves, staying a power of two, floored at 8), then the table takes the
+    remainder at 8 bytes per slot (int32 key + f32 value). If one table
+    sized by ``hash_accum.hash_table_size`` for the whole stream fits,
+    ``parts == 1`` and every chunk is DMA'd exactly once — the paper's
+    I/O lower bound with **no pre-sort**. Otherwise the table is the
+    largest fitting power of two (floored at 128 slots, the sanctioned
+    excess for sub-minimal budgets), each part owns ``table_size // 2``
+    keys — making the load-factor <= 0.5 bound structural — and the stream
+    is re-read once per part.
+    """
+    mn = m * n
+    if chunk is None:
+        chunk = min(_spa.DEFAULT_CHUNK, _next_pow2(max(cap, 8)))
+        while chunk > 8 and 2 * chunk * 8 > vmem_budget_bytes // 2:
+            chunk //= 2  # input double-buffers get at most half the budget
+    input_bytes = 2 * chunk * 8
+    full_table = _hash.hash_table_size(min(max(cap, 1), mn))
+    if full_table * 8 + input_bytes <= vmem_budget_bytes:
+        table_size, part_span, parts = full_table, mn, 1
+    else:
+        budget_slots = max(1, (vmem_budget_bytes - input_bytes) // 8)
+        table_size = max(128, _next_pow2(budget_slots + 1) // 2)
+        part_span = table_size // 2
+        parts = (mn + part_span - 1) // part_span
+    cap_pad = _round_up(max(cap, 1), chunk)
+    num_chunks = cap_pad // chunk
+    obs.counter("kernels.hash_slide.geometry_calls").inc()
+    obs.gauge("kernels.hash_slide.table_size").set(table_size)
+    obs.gauge("kernels.hash_slide.parts").set(parts)
+    obs.gauge("kernels.hash_slide.chunk").set(chunk)
+    obs.gauge("kernels.hash_slide.num_chunks").set(num_chunks)
+    return HashGeometry(table_size=table_size, parts=parts,
+                        part_span=part_span, chunk=chunk,
+                        num_chunks=num_chunks)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n", "table_size",
+                                             "part_span", "parts", "chunk",
+                                             "interpret"))
+def hash_slide_tables(keys: jax.Array, vals: jax.Array, *, m: int, n: int,
+                      table_size: int, part_span: int, parts: int, chunk: int,
+                      interpret: bool = True):
+    """Sort-free sliding-hash accumulate -> raw part tables.
+
+    Takes ``(B, cap)`` streams in **arbitrary order** (no pre-sort — that
+    is the whole point), pads to a chunk multiple with sentinels, launches
+    the sliding grid, and returns ``(tkeys, tvals)`` of shape
+    ``(B, parts * table_size)`` with ``tkeys == -1`` marking empty slots.
+    Compaction (the single counted sort) is the caller's job.
+    """
+    from repro.kernels import hash_slide as _hslide
+
+    B, cap = keys.shape
+    sent = jnp.int32(m * n)
+    valid = keys < m * n
+    keys_c = jnp.where(valid, keys, sent).astype(jnp.int32)
+    vals_c = jnp.where(valid, vals.astype(jnp.float32), 0.0)
+    cap_pad = _round_up(max(cap, 1), chunk)
+    keys_p = jnp.full((B, cap_pad), sent, jnp.int32).at[:, :cap].set(keys_c)
+    vals_p = jnp.zeros((B, cap_pad), jnp.float32).at[:, :cap].set(vals_c)
+    return _hslide.hash_slide_raw(keys_p, vals_p, mn=m * n,
+                                  table_size=table_size,
+                                  part_span=part_span, parts=parts,
+                                  chunk=chunk, interpret=interpret)

@@ -25,9 +25,11 @@ Regression gate
 (all lower-is-better): the one-pass grid's modeled chunk loads
 (``benchmarks/spkadd_io``), the vec fold's serial-store counts
 (``benchmarks/table34_algorithms``), the sparse-allreduce collective
-bytes (``benchmarks/sparse_allreduce_bytes``), and the delta-sync chaos
+bytes (``benchmarks/sparse_allreduce_bytes``), the delta-sync chaos
 soak's wire bytes per sync epoch + worst catch-up SpKAdd window
-(``benchmarks/delta_sync``). For each tracked series —
+(``benchmarks/delta_sync``), and the sliding-hash regime's modeled table
+touches + probe-chain lengths (``benchmarks/hash_accum``). For each
+tracked series —
 same (backend, suite, geometry, record name) — the rolling baseline is the
 median of up to ``window`` prior values; the newest value regresses when it
 exceeds ``baseline * (1 + rel_tol)``. A series with no prior entries passes
@@ -54,6 +56,8 @@ TRACKED_ORACLES: Tuple[str, ...] = (
     "allreduce*coll_bytes",     # sparse_allreduce: per-step collective bytes
     "chaos/*/bytes_per_sync",       # delta_sync: wire bytes per sync epoch
     "chaos/*/catchup_window_max",   # delta_sync: worst catch-up SpKAdd k
+    "hash/*/insert_loads",          # hash_accum: modeled table touches
+    "hash/*/probes_per_insert",     # hash_accum: probe-chain length
 )
 
 

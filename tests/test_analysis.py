@@ -110,6 +110,66 @@ def test_spk106_silent_on_raise_twin_and_waivable():
     assert F.active(fs) == []
 
 
+def test_spk107_unbounded_probe_loop_fires_in_hash_kernels():
+    src = ("import jax\n"
+           "import jax.numpy as jnp\n"
+           "def probe(h0):\n"
+           "    def cond(carry):\n"
+           "        h, done = carry\n"
+           "        return jnp.logical_not(done)\n"  # no bound compare
+           "    def body(carry):\n"
+           "        h, _ = carry\n"
+           "        return h + 1, h > 4\n"
+           "    return jax.lax.while_loop(cond, body, (h0, False))\n")
+    fs = ast_rules.scan_source(src, "kernels/hash_slide.py")
+    assert rules_of(fs) == ["SPK107"]
+    assert "bounded-termination" in fs[0].message
+    # same source outside the hash-kernel family: out of scope
+    assert ast_rules.scan_source(src, "kernels/partition.py") == []
+
+
+def test_spk107_unresolvable_cond_fires():
+    src = ("import jax\n"
+           "from somewhere import opaque_cond\n"
+           "jax.lax.while_loop(opaque_cond, lambda c: c, (0,))\n")
+    fs = ast_rules.scan_source(src, "kernels/hash_accum.py")
+    assert rules_of(fs) == ["SPK107"]
+    assert "not statically resolvable" in fs[0].message
+
+
+def test_spk107_silent_on_bounded_probe_twin():
+    good = ("import jax\n"
+            "import jax.numpy as jnp\n"
+            "def probe(h0, table_size):\n"
+            "    def cond(carry):\n"
+            "        h, steps, done = carry\n"
+            "        return jnp.logical_not(done) & (steps < table_size)\n"
+            "    def body(carry):\n"
+            "        h, steps, _ = carry\n"
+            "        return h + 1, steps + 1, h > 4\n"
+            "    return jax.lax.while_loop(cond, body, (h0, 0, False))\n")
+    assert ast_rules.scan_source(good, "kernels/hash_slide.py") == []
+    # lambda conds resolve too
+    lam = ("import jax\n"
+           "jax.lax.while_loop(lambda c: c[0] < 8, lambda c: (c[0] + 1,), "
+           "(0,))\n")
+    assert ast_rules.scan_source(lam, "kernels/hash_accum.py") == []
+
+
+def test_spk107_inline_doubling_loop_fires_outside_helper():
+    src = ("def size_table(bound):\n"
+           "    size = 1\n"
+           "    while size < 2 * bound:\n"
+           "        size *= 2\n"
+           "    return size\n")
+    fs = ast_rules.scan_source(src, "kernels/hash_slide.py")
+    assert rules_of(fs) == ["SPK107"]
+    assert "hash_table_size" in fs[0].fixit
+    # the SAME loop inside the sanctioned helper is the one legal home
+    good = src.replace("def size_table", "def hash_table_size")
+    assert ast_rules.scan_source(good, "kernels/hash_accum.py") == []
+
+
 def test_syntax_error_is_its_own_finding():
     fs = ast_rules.scan_source("def broken(:\n", "core/foo.py")
     assert rules_of(fs) == ["SPK101"] and "does not parse" in fs[0].message
@@ -339,7 +399,10 @@ def test_missing_baselines_empty_once_families_observed():
                     {"name": "smoke/sort_fold_stores", "value": 4.0},
                     {"name": "allreduce/p4/coll_bytes", "value": 128.0},
                     {"name": "chaos/ef/bytes_per_sync", "value": 700.0},
-                    {"name": "chaos/ef/catchup_window_max", "value": 4.0}],
+                    {"name": "chaos/ef/catchup_window_max", "value": 4.0},
+                    {"name": "hash/er_small/insert_loads", "value": 512.0},
+                    {"name": "hash/er_small/probes_per_insert",
+                     "value": 1.0}],
     }]
     assert ledger.missing_baselines(entries) == []
 

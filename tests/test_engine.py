@@ -176,7 +176,7 @@ def test_auto_sweep_exercises_multiple_regimes():
 
 
 @pytest.mark.parametrize("forced", ["tree", "sorted", "spa", "vec",
-                                    "blocked_spa"])
+                                    "blocked_spa", "hash"])
 def test_forced_regime_bit_identical(forced):
     """Every canonical path — not just the one dispatch picks — must emit
     the sorted reference bitwise. Tree is exercised at k=3, the largest k
@@ -203,9 +203,14 @@ def test_forced_regime_via_cost_model():
                      "blocked_spa_min_density": 0.0}
     assert_bit_identical(ref, E.spkadd_auto(mats, cost_model=force_blocked))
     force_sorted = {"tree_max_k": 0, "spa_max_accum_elems": 1.0,
+                    "hash_min_total_nnz": 1e18,
                     "vec_max_accum_elems": 1.0,
                     "blocked_spa_max_accum_elems": 1.0}
     assert_bit_identical(ref, E.spkadd_auto(mats, cost_model=force_sorted))
+    force_hash = {"tree_max_k": 0, "spa_max_accum_elems": 0.0,
+                  "hash_min_total_nnz": 0.0, "hash_max_compression": 1e9,
+                  "hash_max_table_elems": float(1 << 40)}
+    assert_bit_identical(ref, E.spkadd_auto(mats, cost_model=force_hash))
 
 
 def test_auto_single_matrix_with_duplicates():

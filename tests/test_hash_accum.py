@@ -1,0 +1,335 @@
+"""Sort-free sliding-hash regime: kernel, geometry, dispatch, bit-identity.
+
+The ``hash`` regime's whole claim is that it reproduces the canonical
+PaddedCOO — sorted distinct keys, sentinel padding, structural nnz,
+stream-order f32 left-folded values — **without a single canonical sort
+before the final compaction**. These tests pin that claim at every layer:
+
+- the Pallas kernel (``kernels/hash_slide``) against a pure-numpy
+  insert-or-accumulate reference, including crafted probe collisions
+  (under the odd multiplicative hash, keys congruent mod the pow2 table
+  size collide *exactly*);
+- the launch geometry (pow2 tables, load factor <= 0.5, single part when
+  the table fits, ``part_span == table_size // 2`` when it does not);
+- the engine (forced-hash output bit-identical to vec/spa on the adversarial
+  property matrix: duplicate-heavy, all-sentinel, exact cancellation,
+  batched and ragged stacks) with the zero-presort / one-sort pins;
+- the dispatch region boundaries in the cost model.
+
+``SPKADD_NIGHTLY=1`` (the cron lane, ``scripts/ci.sh nightly``) widens the
+property matrix to the exhaustive sweep — high-collision key streams, the
+load-factor boundary, all-duplicate chunks — that is too slow for the
+per-push interpret-mode suite. Both modes run the same assertions; nightly
+only enlarges the inputs, so there is nothing to skip.
+"""
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import obs
+from repro.core import engine as E
+from repro.core import sparse as S
+from repro.analysis.jaxpr_rules import REGIME_FORCES
+from repro.kernels import ops as kops
+from repro.kernels.hash_accum import HASH_PRIME, hash_table_size
+from repro.kernels.hash_slide import hash_slide_raw, modeled_insert_stats
+
+NIGHTLY = os.environ.get("SPKADD_NIGHTLY", "0") == "1"
+
+FORCE_HASH = dict(REGIME_FORCES["hash"])
+FORCE_VEC = dict(REGIME_FORCES["vec"])
+FORCE_SPA = dict(REGIME_FORCES["spa"])
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def random_collection(seed, k, m, n, nnz):
+    rng = np.random.default_rng(seed)
+    mats = []
+    for _ in range(k):
+        d = np.zeros((m, n), np.float32)
+        take = min(nnz, m * n)
+        idx = rng.choice(m * n, take, replace=False)
+        d.flat[idx] = rng.standard_normal(take)
+        mats.append(S.from_dense(jnp.asarray(d), cap=nnz))
+    return mats
+
+
+def assert_bit_identical(a: S.PaddedCOO, b: S.PaddedCOO, msg=""):
+    assert a.shape == b.shape and a.cap == b.cap, msg
+    assert int(a.nnz) == int(b.nnz), msg
+    np.testing.assert_array_equal(np.asarray(a.keys), np.asarray(b.keys),
+                                  err_msg=msg)
+    # byte compare on purpose: the contract is bit-identity, so +0.0 vs
+    # -0.0 and NaN payloads all count
+    assert np.asarray(a.vals).tobytes() == np.asarray(b.vals).tobytes(), msg
+
+
+def reference_tables(keys, vals, *, mn, table_size, part_span, parts):
+    """Pure-numpy replay of the kernel: per-part linear-probe tables,
+    insert-or-accumulate in stream order, f32 folds from 0.0."""
+    keys = np.asarray(keys)
+    vals = np.asarray(vals, np.float32)
+    B = keys.shape[0]
+    mask = table_size - 1
+    tkeys = np.full((B, parts * table_size), -1, np.int32)
+    tvals = np.zeros((B, parts * table_size), np.float32)
+    for b in range(B):
+        for k, v in zip(keys[b], vals[b]):
+            k = int(k)
+            if k >= mn:
+                continue
+            p = k // part_span
+            h = (k * HASH_PRIME) & mask
+            while tkeys[b, p * table_size + h] not in (-1, k):
+                h = (h + 1) & mask
+            tkeys[b, p * table_size + h] = k
+            tvals[b, p * table_size + h] = np.float32(
+                tvals[b, p * table_size + h] + np.float32(v))
+    return tkeys, tvals
+
+
+# ---------------------------------------------------------------------------
+# sizing helper + kernel vs reference
+# ---------------------------------------------------------------------------
+
+def test_hash_table_size_pow2_and_load_factor():
+    for bound in [1, 2, 3, 7, 8, 100, 1023, 1024]:
+        t = hash_table_size(bound)
+        assert t & (t - 1) == 0, f"{t} not pow2"
+        assert t >= 2 * bound, f"load factor > 0.5 at bound={bound}"
+        # minimality: half the table would break the bound
+        assert t // 2 < 2 * bound
+
+
+@pytest.mark.parametrize("parts,chunk", [(1, 64), (2, 64), (4, 32)])
+def test_kernel_matches_numpy_reference(parts, chunk):
+    mn = 256
+    rng = np.random.default_rng(7 + parts)
+    cap = 128
+    keys = rng.integers(0, mn, size=(2, cap)).astype(np.int32)
+    vals = rng.standard_normal((2, cap)).astype(np.float32)
+    # sprinkle sentinels mid-stream: the kernel must skip them
+    keys[:, ::5] = mn
+    vals[:, ::5] = 0.0
+    part_span = -(-mn // parts)
+    # the structural sizing rule: distinct keys per part <= min(cap, span)
+    table_size = hash_table_size(min(cap, part_span))
+    out_k, out_v = hash_slide_raw(jnp.asarray(keys), jnp.asarray(vals),
+                                  mn=mn, table_size=table_size,
+                                  part_span=part_span, parts=parts,
+                                  chunk=chunk)
+    ref_k, ref_v = reference_tables(keys, vals, mn=mn,
+                                    table_size=table_size,
+                                    part_span=part_span, parts=parts)
+    np.testing.assert_array_equal(np.asarray(out_k), ref_k)
+    assert np.asarray(out_v).tobytes() == ref_v.tobytes()
+
+
+def test_kernel_crafted_collisions_probe_in_order():
+    """Keys congruent mod the pow2 table size collide exactly under the odd
+    multiplicative hash, so a stride-``table_size`` key set is the worst
+    probe chain; the kernel must still fold each duplicate in stream order."""
+    mn = 1 << 12
+    table_size = 128  # == 2 * cap, the tightest legal sizing for cap = 64
+    stride_keys = [5 + i * table_size for i in range(6)]     # one chain
+    stream = stride_keys + stride_keys[::-1] + stride_keys   # duplicates too
+    keys = np.asarray([stream + [mn] * (64 - len(stream))], np.int32)
+    vals = np.asarray([np.arange(64, dtype=np.float32) + 1.0])
+    vals[keys >= mn] = 0.0
+    out_k, out_v = hash_slide_raw(jnp.asarray(keys), jnp.asarray(vals),
+                                  mn=mn, table_size=table_size,
+                                  part_span=mn, parts=1, chunk=64)
+    ref_k, ref_v = reference_tables(keys, vals, mn=mn,
+                                    table_size=table_size, part_span=mn,
+                                    parts=1)
+    np.testing.assert_array_equal(np.asarray(out_k), ref_k)
+    assert np.asarray(out_v).tobytes() == ref_v.tobytes()
+    stats = modeled_insert_stats(keys, mn=mn, table_size=table_size,
+                                 part_span=mn, parts=1, chunk=64)
+    assert stats["max_probes"] == len(stride_keys)  # full chain walked
+
+
+def test_modeled_stats_match_reference_occupancy():
+    rng = np.random.default_rng(11)
+    mn = 512
+    keys = rng.integers(0, mn, size=(1, 96)).astype(np.int32)
+    table_size = hash_table_size(96)
+    stats = modeled_insert_stats(keys, mn=mn, table_size=table_size,
+                                 part_span=mn, parts=1, chunk=32)
+    distinct = len(np.unique(keys[keys < mn]))
+    assert stats["load_factor_max"] == pytest.approx(distinct / table_size)
+    assert stats["load_factor_max"] <= 0.5
+    assert stats["inserts"] == int((keys < mn).sum())
+    assert stats["probes"] >= stats["inserts"]
+
+
+# ---------------------------------------------------------------------------
+# launch geometry invariants
+# ---------------------------------------------------------------------------
+
+def test_geometry_single_part_when_table_fits():
+    g = kops.hash_launch_geometry(256, m=64, n=8)
+    assert g.parts == 1
+    assert g.table_size & (g.table_size - 1) == 0
+    assert g.part_span == 64 * 8
+    assert g.table_size == hash_table_size(256)  # sized to the stream
+
+
+def test_geometry_sliding_parts_under_small_budget():
+    m, n, cap = 256, 32, 2048
+    g = kops.hash_launch_geometry(cap, m=m, n=n, vmem_budget_bytes=8192)
+    assert g.parts > 1
+    assert g.table_size & (g.table_size - 1) == 0
+    # the multi-part sizing rule: each part owns half a table of key space,
+    # so per-part load factor is structurally <= 0.5
+    assert g.part_span == g.table_size // 2
+    assert g.part_span * g.parts >= m * n
+    assert g.num_chunks * g.chunk >= cap
+
+
+def test_geometry_table_never_exceeds_key_space_bound():
+    # cap >> mn: distinct keys are bounded by mn, so the table is sized to
+    # the key space, not the stream
+    g = kops.hash_launch_geometry(1 << 16, m=16, n=4)
+    assert g.table_size <= 2 * hash_table_size(16 * 4)
+
+
+# ---------------------------------------------------------------------------
+# engine: bit-identity property matrix + sort-free pins
+# ---------------------------------------------------------------------------
+
+def _spread(seed):
+    """(k, m, n, nnz) cells; nightly widens to the exhaustive sweep."""
+    cells = [
+        (8, 48, 8, 24),    # random baseline
+        (8, 8, 4, 16),     # duplicate-heavy: stream 4x the key space
+        (16, 6, 2, 8),     # extreme duplicates: every chunk collides
+    ]
+    if NIGHTLY:
+        cells += [
+            (16, 128, 16, 96),   # load-factor boundary at scale
+            (32, 8, 8, 48),      # all-duplicate chunks, deep folds
+            (24, 256, 4, 64),    # high-collision stride-heavy key space
+        ]
+    return [(seed + i, *c) for i, c in enumerate(cells)]
+
+
+@pytest.mark.parametrize("seed,k,m,n,nnz", _spread(100))
+def test_forced_hash_bit_identical_to_vec_and_spa(seed, k, m, n, nnz):
+    mats = random_collection(seed, k, m, n, nnz)
+    out_hash = E.spkadd_auto(mats, cost_model=dict(FORCE_HASH))
+    out_vec = E.spkadd_auto(mats, cost_model=dict(FORCE_VEC))
+    out_spa = E.spkadd_auto(mats, cost_model=dict(FORCE_SPA))
+    assert_bit_identical(out_hash, out_vec, "hash != vec")
+    assert_bit_identical(out_hash, out_spa, "hash != spa")
+
+
+def test_forced_hash_all_sentinel_collection():
+    zero = jnp.zeros((16, 4), jnp.float32)
+    mats = [S.from_dense(zero, cap=8) for _ in range(6)]
+    out = E.spkadd_auto(mats, cost_model=dict(FORCE_HASH))
+    assert int(out.nnz) == 0
+    assert np.all(np.asarray(out.keys) == 16 * 4)
+    assert np.asarray(out.vals).tobytes() == \
+        np.zeros(out.cap, np.float32).tobytes()
+
+
+def test_forced_hash_exact_cancellation():
+    rng = np.random.default_rng(3)
+    d = np.zeros((32, 8), np.float32)
+    idx = rng.choice(d.size, 40, replace=False)
+    d.flat[idx] = rng.standard_normal(40)
+    a = S.from_dense(jnp.asarray(d), cap=64)
+    b = S.from_dense(jnp.asarray(-d), cap=64)
+    out_hash = E.spkadd_auto([a, b, a], cost_model=dict(FORCE_HASH))
+    out_vec = E.spkadd_auto([a, b, a], cost_model=dict(FORCE_VEC))
+    # cancellation keeps keys structurally present (canonical contract:
+    # structural nnz counts distinct keys, not nonzero values)
+    assert_bit_identical(out_hash, out_vec, "cancellation fold drifted")
+
+
+def test_hash_dispatch_is_sort_free_before_compaction():
+    mats = random_collection(42, 8, 48, 8, 24)
+    before = S.sort_calls()
+    E.spkadd_auto(mats, cost_model=dict(FORCE_HASH))
+    assert S.sort_calls() - before == 1, "hash must pay exactly one sort"
+    assert obs.gauge("engine.hash.presort_sorts").value == 0, \
+        "a canonical sort ran BEFORE the tables were built"
+    assert obs.counter("engine.dispatch.hash").value > 0
+
+
+# ---------------------------------------------------------------------------
+# batched + ragged native paths
+# ---------------------------------------------------------------------------
+
+def test_batched_hash_bit_identical_per_batch():
+    colls = [random_collection(200 + b, 6, 32, 8, 16) for b in range(3)]
+    stacked = E.stack_collections(colls)
+    before = S.sort_calls()
+    out = E.spkadd_batched(stacked, cost_model=dict(FORCE_HASH))
+    assert S.sort_calls() - before == 1, \
+        "batched hash must share ONE compaction sort across the stack"
+    for b, coll in enumerate(colls):
+        single = E.spkadd_auto(coll, cost_model=dict(FORCE_HASH))
+        got = S.PaddedCOO(out.keys[b], out.vals[b], out.nnz[b], out.shape)
+        assert_bit_identical(got, single, f"batch {b} diverged")
+
+
+def test_ragged_hash_matches_ragged_vec():
+    # ragged stacks bucket by (shape, k, pow2 caps); both regimes see the
+    # same buckets, so their outputs must agree bit-for-bit per collection
+    colls = [
+        random_collection(300, 4, 32, 8, 12),
+        random_collection(301, 4, 32, 8, 12),
+        random_collection(302, 6, 32, 8, 20),   # different k+cap bucket
+    ]
+    if NIGHTLY:
+        colls += [random_collection(303 + i, 4 + i % 3, 32, 8, 12 + 4 * i)
+                  for i in range(6)]
+    out_hash = E.spkadd_batched_ragged(colls, cost_model=dict(FORCE_HASH))
+    out_vec = E.spkadd_batched_ragged(colls, cost_model=dict(FORCE_VEC))
+    for i, (h, v) in enumerate(zip(out_hash, out_vec)):
+        assert_bit_identical(h, v, f"ragged collection {i} diverged")
+
+
+# ---------------------------------------------------------------------------
+# dispatch region boundaries
+# ---------------------------------------------------------------------------
+
+def test_hash_region_boundaries():
+    cm = E.DEFAULT_COST_MODEL
+    in_region = E.RegimeSignals(
+        k=16, density=1.0 / 128.0, compression=1.1,
+        accum_elems=int(cm["spa_max_accum_elems"]) * 2)
+    assert E.select_algorithm(in_region) == "hash"
+    # below the work floor (total nnz < hash_min_total_nnz) the
+    # sort-paying family is fine
+    tiny = E.RegimeSignals(k=16, density=1e-5, compression=1.1,
+                           accum_elems=int(cm["spa_max_accum_elems"]) * 2)
+    assert E.select_algorithm(tiny) != "hash"
+    # heavy compression means heavy merging: the sorted fold wins
+    compressing = E.RegimeSignals(
+        k=16, density=1.0 / 128.0, compression=4.0,
+        accum_elems=int(cm["spa_max_accum_elems"]) * 2)
+    assert E.select_algorithm(compressing) != "hash"
+    # a table that cannot fit any VMEM budget disqualifies the regime
+    huge = E.RegimeSignals(k=16, density=0.5, compression=1.1,
+                           accum_elems=1 << 30)
+    assert E.select_algorithm(huge) != "hash"
+
+
+def test_hash_region_survives_checked_in_cost_model():
+    # the shipped configs/cost_model_default.json must reproduce the same
+    # region, or a config edit could silently turn the regime off
+    cm = E.default_cost_model()
+    for key in ("hash_min_total_nnz", "hash_max_compression",
+                "hash_max_table_elems"):
+        assert key in cm
+    sig = E.RegimeSignals(k=16, density=1.0 / 128.0, compression=1.1,
+                          accum_elems=2048 * 64)
+    assert E.select_algorithm(sig, cm) == "hash"

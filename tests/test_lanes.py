@@ -1,0 +1,69 @@
+"""CI lane assignment is a partition: every test file in exactly one lane.
+
+``scripts/test_lanes.py`` is what keeps the tier-1 matrix honest — a file
+that silently fell out of every lane would pass CI forever without running.
+These tests pin the partition property itself, so the lane script cannot
+regress into dropping or double-running a file, and pin the weight table
+against stale entries (a weight for a deleted file hides a typo'd rename).
+"""
+import importlib.util
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TESTS_DIR = os.path.join(REPO, "tests")
+
+
+def _load_lanes_module():
+    path = os.path.join(REPO, "scripts", "test_lanes.py")
+    spec = importlib.util.spec_from_file_location("ci_test_lanes", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _test_files():
+    return sorted(f for f in os.listdir(TESTS_DIR)
+                  if f.startswith("test_") and f.endswith(".py"))
+
+
+def test_every_file_in_exactly_one_lane():
+    mod = _load_lanes_module()
+    files = _test_files()
+    for n in (1, 3, 5):
+        assignment = mod.lanes(n)
+        assert len(assignment) == n
+        flat = [f for lane in assignment for f in lane]
+        # exactly one lane: no file dropped, no file duplicated
+        assert sorted(flat) == files, (
+            f"lanes({n}) is not a partition of tests/test_*.py")
+
+
+def test_assignment_is_deterministic():
+    mod = _load_lanes_module()
+    assert mod.lanes(3) == mod.lanes(3)
+
+
+def test_weights_refer_to_real_files():
+    # a weight keyed by a renamed/deleted file silently decays to the
+    # default-1 path — keep the table in lockstep with the tree
+    mod = _load_lanes_module()
+    files = set(_test_files())
+    stale = sorted(set(mod.WEIGHTS) - files)
+    assert not stale, f"WEIGHTS entries without a test file: {stale}"
+
+
+def test_hash_accum_lane_weight_is_measured():
+    # the sliding-hash property suite is interpret-mode heavy; it must
+    # carry a measured weight so bin-packing spreads it off the big lanes
+    mod = _load_lanes_module()
+    assert "test_hash_accum.py" in mod.WEIGHTS
+    assert mod.WEIGHTS["test_hash_accum.py"] > 1
+
+
+def test_lanes_balance_within_heaviest_file():
+    # greedy bin-packing bound: max lane load <= min load + heaviest weight
+    mod = _load_lanes_module()
+    assignment = mod.lanes(3)
+    loads = [sum(mod.WEIGHTS.get(f, 1) for f in lane) for lane in assignment]
+    heaviest = max(mod.WEIGHTS.get(f, 1) for f in _test_files())
+    assert max(loads) - min(loads) <= heaviest
