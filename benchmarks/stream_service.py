@@ -1,0 +1,314 @@
+"""Chaos soak + serving oracle for the multi-tenant stream service.
+
+Three seeded cells over :class:`~repro.core.stream_service.StreamService`
+driven by the open-loop load generator (``repro/launch/stream_serve.py``)
+with faults from :class:`~repro.runtime.faults.ServiceFaultInjector`:
+
+- ``crash_replay`` — a planned :class:`InjectedCrash` mid-flush (after the
+  engine computed the co-flush, before any commit), then recovery over the
+  same journal and a resumed drive: every tenant's final running sum must
+  be **bitwise identical** to the uninterrupted reference run (keys, vals,
+  nnz, and flush counts), with replayed records > 0 and zero quarantines —
+  the exactly-once recovery contract at a flush boundary.
+- ``overload_shed`` — ~2x the pending-nnz budget offered by hot tenants
+  while cold tenants hold buffered-but-unflushed windows: the service must
+  shed **only** the cold tenants' unflushed windows (hot eviction == 0,
+  flushed sums never touched), keep admitting hot continuations, and land
+  shed rate + p99 flush latency inside the gated bands the perf ledger
+  tracks (``stream/overload/shed_rate``,
+  ``stream/overload/p99_flush_latency``).
+- ``torn_journal`` — seeded torn journal writes (truncated records, the
+  bytes a crash mid-``write`` leaves): recovery must detect every torn
+  record via checksum, quarantine it loudly (moved to ``quarantine/``,
+  counted), replay every intact record, and keep serving — corruption
+  never poisons recovery.
+
+``--smoke`` gates all three (exit nonzero on any violation) and emits
+``BENCH_stream_service.json`` through ``scripts/perf_fleet.py`` into the
+committed perf-history ledger.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import emit, write_json
+from repro.core.stream_service import (StreamService, TornRecordError,
+                                       decode_journal, latency_percentiles,
+                                       REC_MAGIC)
+from repro.launch.stream_serve import (build_workload, drive, make_matrix,
+                                       summarize, tenant_name)
+from repro.runtime.faults import ServiceFaultInjector, ServiceFaultSpec
+
+SHAPE = (32, 8)
+NNZ = 16          # nnz per pushed matrix
+CAP = 256         # per-tenant running-sum budget
+
+
+def _mk(arrival):
+    return make_matrix(SHAPE, NNZ, arrival.mat_seed)
+
+
+def _final_state(service, tenants):
+    """Per-tenant (keys, vals, nnz, flushes) — the bitwise-comparable
+    fingerprint of the flushed state."""
+    out = {}
+    for t in tenants:
+        s = service.value(t)
+        out[t] = (np.asarray(s.keys), np.asarray(s.vals), int(s.nnz),
+                  service.stats()["tenants"][t]["flushes"])
+    return out
+
+
+def _bitwise_equal(a, b):
+    return all(
+        np.array_equal(a[t][0], b[t][0])
+        and a[t][1].tobytes() == b[t][1].tobytes()   # bit-level, NaN-safe
+        and a[t][2] == b[t][2] and a[t][3] == b[t][3]
+        for t in a)
+
+
+def _steady_service(journal_root, *, batch_k, fault_injector=None):
+    """Under-capacity service: watermarks far above the offered load so
+    admission never interferes with the durability cells."""
+    return StreamService(soft_pending_nnz=1 << 20,
+                         hard_pending_nnz=1 << 21,
+                         flush_deadline=0.5, journal_root=journal_root,
+                         fault_injector=fault_injector)
+
+
+def run_crash_replay(*, tenants=4, duration=6.0, rate=2.0, batch_k=3,
+                     crash_at=3, seed=17) -> dict:
+    """Mid-flush crash + journal recovery vs. the uninterrupted run."""
+    names = [tenant_name(i) for i in range(tenants)]
+    events = build_workload(n_tenants=tenants, duration=duration, rate=rate,
+                            tick_every=0.25, seed=seed)
+    with tempfile.TemporaryDirectory() as ref_dir, \
+            tempfile.TemporaryDirectory() as crash_dir:
+        # reference: same journal code path, no faults, never interrupted
+        ref = _steady_service(ref_dir, batch_k=batch_k)
+        for n in names:
+            ref.register_tenant(n, SHAPE, cap_budget=CAP, batch_k=batch_k)
+        ref_res = drive(ref, events, make_mat=_mk)
+        ref.drain(duration)
+        ref_state = _final_state(ref, names)
+
+        # chaos: crash mid-flush, recover over the same journal, resume at
+        # the crashed event (the tick whose flush was computed but lost)
+        inj = ServiceFaultInjector(
+            ServiceFaultSpec(crash_at_flush=(crash_at,), seed=seed))
+        svc = _steady_service(crash_dir, batch_k=batch_k,
+                              fault_injector=inj)
+        for n in names:
+            svc.register_tenant(n, SHAPE, cap_budget=CAP, batch_k=batch_k)
+        res = drive(svc, events, make_mat=_mk)
+        crashed = not res.completed
+        recovered = _steady_service(crash_dir, batch_k=batch_k)
+        replayed = sum(
+            recovered.register_tenant(n, SHAPE, cap_budget=CAP,
+                                      batch_k=batch_k) for n in names)
+        res2 = drive(recovered, events, make_mat=_mk,
+                     start_index=res.next_index)
+        recovered.drain(duration)
+        rec_stats = recovered.stats()["tenants"]
+        out = {
+            "label": "crash_replay",
+            "crashed": crashed,
+            "crashes_injected": inj.injected["crash"],
+            "resumed_completed": res2.completed,
+            "replayed_records": replayed,
+            "quarantined": sum(t["quarantined_records"]
+                               for t in rec_stats.values()),
+            "bitwise": _bitwise_equal(ref_state,
+                                      _final_state(recovered, names)),
+            "ref_flushes": ref.flush_ordinal,
+            "steady_p99": latency_percentiles(ref.flush_latencies)[1],
+            "ref_admitted": ref_res.admitted,
+        }
+    emit("stream/crash_replay/replayed_records",
+         float(out["replayed_records"]),
+         f"crash_at={crash_at} bitwise={out['bitwise']}")
+    emit("stream/steady/p99_flush_latency", out["steady_p99"],
+         f"flushes={out['ref_flushes']} admitted={out['ref_admitted']}")
+    return out
+
+
+def run_overload_shed(*, duration=4.0, seed=25) -> dict:
+    """2x-budget offered load: cold tenants' unflushed windows are the
+    shed victims; hot tenants keep flushing inside the latency band."""
+    n_cold, n_hot = 4, 4
+    cold = [tenant_name(i) for i in range(n_cold)]
+    hot = [tenant_name(n_cold + i) for i in range(n_hot)]
+    soft, hard = 512, 576
+    svc = StreamService(soft_pending_nnz=soft, hard_pending_nnz=hard,
+                        flush_deadline=0.5)
+    # cold: big batch_k so their early pushes never seal -> pure unflushed
+    # pending; hot: small windows that seal and co-flush continuously
+    for n in cold:
+        svc.register_tenant(n, SHAPE, cap_budget=CAP, batch_k=16)
+    for n in hot:
+        svc.register_tenant(n, SHAPE, cap_budget=CAP, batch_k=4)
+    # two phases: cold tenants establish their pending alone in [0, 0.5)
+    # (hot stalled), then the hot tenants' ~2x-budget load arrives
+    events = build_workload(
+        n_tenants=n_cold + n_hot, duration=duration, rate=10.0,
+        tick_every=0.25, seed=seed, cold_tenants=cold, cold_until=0.5,
+        faults=ServiceFaultSpec(stall_tenants=tuple(hot),
+                                stall_from=0.0, stall_until=0.5))
+    res = drive(svc, events, make_mat=_mk)
+    s = summarize(svc, res, duration=duration)
+    st = svc.stats()["tenants"]
+    out = {
+        "label": "overload_shed",
+        "admitted": res.admitted,
+        "deferred": res.deferred,
+        "evicted_nnz_cold": sum(st[n]["evicted_nnz"] for n in cold),
+        "evicted_nnz_hot": sum(st[n]["evicted_nnz"] for n in hot),
+        "evicted_windows": sum(t["evicted_windows"] for t in st.values()),
+        "hot_flushes": sum(st[n]["flushes"] for n in hot),
+        "shed_rate": s["shed_rate"],
+        "p99_flush_latency": s["p99_flush_latency"],
+        "pending_nnz": s["pending_nnz"],
+        # nnz conservation, exact: every admitted nonzero is flushed,
+        # still buffered, or was loudly evicted — nothing silently dropped
+        "conserved": all(
+            t["admitted_nnz"] == t["evicted_nnz"] + t["buffered_nnz"]
+            + t["flushed_nnz"] for t in st.values()),
+    }
+    emit("stream/overload/shed_rate", out["shed_rate"],
+         f"evicted_windows={out['evicted_windows']} "
+         f"deferred={out['deferred']}")
+    emit("stream/overload/p99_flush_latency", out["p99_flush_latency"],
+         f"hot_flushes={out['hot_flushes']} admitted={out['admitted']}")
+    return out
+
+
+def run_torn_journal(*, tenants=3, duration=4.0, rate=4.0, batch_k=4,
+                     torn_p=0.3, seed=31) -> dict:
+    """Seeded truncated journal records: checksums catch every one at
+    recovery; intact records replay; serving continues."""
+    names = [tenant_name(i) for i in range(tenants)]
+    events = build_workload(n_tenants=tenants, duration=duration, rate=rate,
+                            tick_every=0.25, seed=seed)
+    with tempfile.TemporaryDirectory() as root:
+        inj = ServiceFaultInjector(
+            ServiceFaultSpec(torn_write_p=torn_p, seed=seed))
+        svc = _steady_service(root, batch_k=batch_k, fault_injector=inj)
+        for n in names:
+            svc.register_tenant(n, SHAPE, cap_budget=CAP, batch_k=batch_k)
+        drive(svc, events, make_mat=_mk)
+        # no drain: unflushed windows stay journal-only, like a hard kill
+
+        # independent ground truth: which surviving record files decode?
+        expected_torn = expected_good = 0
+        for n in names:
+            tdir = os.path.join(root, n)
+            for fn in sorted(os.listdir(tdir)):
+                if not fn.startswith("rec_"):
+                    continue
+                with open(os.path.join(tdir, fn), "rb") as f:
+                    buf = f.read()
+                try:
+                    decode_journal(buf, REC_MAGIC)
+                    expected_good += 1
+                except TornRecordError:
+                    expected_torn += 1
+
+        recovered = _steady_service(root, batch_k=batch_k)
+        replayed = sum(
+            recovered.register_tenant(n, SHAPE, cap_budget=CAP,
+                                      batch_k=batch_k) for n in names)
+        rec_stats = recovered.stats()["tenants"]
+        quarantined = sum(t["quarantined_records"]
+                          for t in rec_stats.values())
+        quarantine_files = sum(
+            len(os.listdir(os.path.join(root, n, "quarantine")))
+            for n in names)
+        recovered.drain(duration)  # still serving after quarantine
+        out = {
+            "label": "torn_journal",
+            "torn_injected": inj.injected["torn_write"],
+            "expected_torn": expected_torn,
+            "expected_good": expected_good,
+            "quarantined": quarantined,
+            "quarantine_files": quarantine_files,
+            "replayed": replayed,
+            "post_recovery_flushes": recovered.flush_ordinal,
+        }
+    emit("stream/torn_journal/quarantined", float(out["quarantined"]),
+         f"injected={out['torn_injected']} replayed={out['replayed']}")
+    return out
+
+
+def smoke() -> int:
+    failures = []
+
+    a = run_crash_replay()
+    if not (a["crashed"] and a["crashes_injected"] == 1):
+        failures.append(f"crash cell never crashed: {a}")
+    if not a["resumed_completed"]:
+        failures.append(f"resumed drive did not complete: {a}")
+    if a["replayed_records"] < 1:
+        failures.append(f"recovery replayed nothing: {a}")
+    if a["quarantined"] != 0:
+        failures.append(f"crash cell quarantined records: {a}")
+    if not a["bitwise"]:
+        failures.append(f"recovered state not bitwise-identical: {a}")
+
+    b = run_overload_shed()
+    if b["evicted_windows"] < 1 or b["evicted_nnz_cold"] < 1:
+        failures.append(f"overload shed nothing: {b}")
+    if b["evicted_nnz_hot"] != 0:
+        failures.append(f"overload evicted hot-tenant windows: {b}")
+    if b["deferred"] < 1:
+        failures.append(f"overload never deferred (no backpressure): {b}")
+    if b["hot_flushes"] < 1:
+        failures.append(f"hot tenants never flushed under overload: {b}")
+    if not b["conserved"]:
+        failures.append(f"nnz not conserved (silent drop): {b}")
+    if not 0.0 < b["shed_rate"] < 0.5:
+        failures.append(f"shed_rate {b['shed_rate']} outside (0, 0.5): {b}")
+    if not 0.0 < b["p99_flush_latency"] <= 1.5:
+        failures.append(f"overload p99 flush latency "
+                        f"{b['p99_flush_latency']} outside (0, 1.5]: {b}")
+
+    c = run_torn_journal()
+    if c["torn_injected"] < 1 or c["expected_torn"] < 1:
+        failures.append(f"torn cell injected nothing that survived: {c}")
+    if c["quarantined"] != c["expected_torn"] \
+            or c["quarantine_files"] != c["expected_torn"]:
+        failures.append(f"quarantine count mismatch (want "
+                        f"{c['expected_torn']}): {c}")
+    if c["replayed"] != c["expected_good"]:
+        failures.append(f"replayed {c['replayed']} != intact "
+                        f"{c['expected_good']}: {c}")
+    if c["post_recovery_flushes"] < 1:
+        failures.append(f"service not serving after quarantine: {c}")
+
+    for f in failures:
+        emit("stream/FAILED", 1.0, f)
+        print(f"FAIL: {f}", file=sys.stderr)
+    if not failures:
+        emit("stream/ok", 0.0, "all stream-service chaos cells green")
+    return 1 if failures else 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="gate the three chaos cells (CI)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write BENCH_stream_service.json (perf trajectory)")
+    args = ap.parse_args()
+    rc = smoke()
+    if args.json:
+        write_json(args.json, suite="stream_service_smoke", status=rc)
+    sys.exit(rc)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,7 @@
 # Usage: scripts/ci.sh [extra pytest args...]
 #        scripts/ci.sh static        # spkaddlint contract gate only
 #        scripts/ci.sh chaos         # fault-injection smoke lane only
+#        scripts/ci.sh stream        # stream-service chaos lane only
 #        scripts/ci.sh nightly       # full (non-smoke) bench matrix + sweeps
 # Env:   RESULTS_DIR (default: results) — where BENCH_*.json artifacts land
 #        CI_SKIP_INSTALL=1 — skip pip install in EVERY lane (pre-baked image)
@@ -39,6 +40,19 @@ if [[ "${1:-}" == "chaos" ]]; then
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
         tests/test_delta_sync.py tests/test_substrate.py
     exec python scripts/perf_fleet.py --only delta_sync \
+        --results "$RESULTS_DIR"
+fi
+
+# Stream lane: the multi-tenant streaming service in isolation. Runs the
+# service/journal/admission tests, then the three seeded chaos cells
+# (benchmarks/stream_service.py --smoke: mid-flush crash -> bitwise
+# recovery, 2x overload -> cold-only shedding, torn journal -> quarantine)
+# through the perf fleet so the p99-flush-latency and shed-rate oracles
+# land in the committed ledger and the regression gate sees them.
+if [[ "${1:-}" == "stream" ]]; then
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+        tests/test_stream_service.py
+    exec python scripts/perf_fleet.py --only stream_service \
         --results "$RESULTS_DIR"
 fi
 

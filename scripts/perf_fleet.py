@@ -42,6 +42,8 @@ SUITES = {
     "spkadd_io": ("benchmarks.spkadd_io", "BENCH_spkadd_io.json"),
     "delta_sync": ("benchmarks.delta_sync", "BENCH_delta_sync.json"),
     "hash_accum": ("benchmarks.hash_accum", "BENCH_hash_accum.json"),
+    "stream_service": ("benchmarks.stream_service",
+                       "BENCH_stream_service.json"),
 }
 
 

@@ -35,6 +35,7 @@ WEIGHTS = {
     "test_partition.py": 5,
     "test_kernels.py": 4,
     "test_delta_sync.py": 4,
+    "test_stream_service.py": 4,
     "test_hash_accum.py": 5,
     "test_lanes.py": 1,
     "test_analysis.py": 3,

@@ -29,6 +29,13 @@ Rule scoping is by repo-relative path under ``src/repro``:
   inline table-size doubling ``while``-loops outside the shared
   ``hash_table_size`` helper, so the pow2 / load-factor <= 0.5 sizing rule
   has exactly one implementation.
+- SPK108 torn-write: no write-mode ``open()`` directly on a durable path
+  (one whose expression mentions a :data:`DURABLE_PATH_TOKENS` keyword —
+  journal / spool / checkpoint / snapshot files) unless the expression
+  also carries a temp-file token: durable bytes must land via the atomic
+  ``tmp + os.replace`` discipline (``stream_service._atomic_write``,
+  delta-sync spool writes), because a crash mid-``write`` on the real
+  path is exactly the torn record the chaos cells inject.
 """
 from __future__ import annotations
 
@@ -42,7 +49,8 @@ SORT_HOME = "core/sparse.py"
 EXPERIMENTAL_HOME = "compat.py"
 
 SPAN_ALLOWED_FILES = {"core/engine.py", "core/streaming.py",
-                      "core/allreduce.py", "kernels/ops.py"}
+                      "core/stream_service.py", "core/allreduce.py",
+                      "kernels/ops.py"}
 SPAN_ALLOWED_DIRS = ("obs/", "launch/", "runtime/", "serve/", "train/")
 
 GLOBAL_ALLOWED_DIRS = ("obs/",)
@@ -66,6 +74,12 @@ HASH_KERNEL_PREFIX = "kernels/hash"
 HASH_SIZING_HELPER = "hash_table_size"
 #: dotted names of the traced while-loop primitive (probe loops)
 WHILE_LOOP_CALLS = {"jax.lax.while_loop"}
+
+#: SPK108: path-expression tokens that mark a durable artifact
+DURABLE_PATH_TOKENS = ("journal", "spool", "frame", "ckpt", "checkpoint",
+                       "snapshot", "rec_")
+#: SPK108: tokens that mark the sanctioned tmp+os.replace staging file
+TMP_PATH_TOKENS = ("tmp",)
 
 
 def _alias_map(tree: ast.AST) -> Dict[str, str]:
@@ -246,7 +260,52 @@ def scan_source(source: str, rel: str) -> List[Finding]:
                  f"{name}() is host-nondeterministic inside traced code",
                  "hoist timing to the launch boundary (obs.span) and "
                  "randomness to jax.random keys threaded from the caller")
+        # SPK108: write-mode open() straight onto a durable path
+        if name == "open" and _open_mode_writes(node):
+            tokens = _path_tokens(node.args[0]) if node.args else set()
+            durable = any(d in t for t in tokens
+                          for d in DURABLE_PATH_TOKENS)
+            staged = any(s in t for t in tokens for s in TMP_PATH_TOKENS)
+            if durable and not staged:
+                emit("SPK108", node,
+                     "write-mode open() directly on a durable path "
+                     "(journal/spool/checkpoint/snapshot) — a crash "
+                     "mid-write leaves a torn record on the real path",
+                     "write to a `.tmp` sibling and os.replace() it over "
+                     "the destination (see stream_service._atomic_write)")
     return findings
+
+
+def _open_mode_writes(node: ast.Call) -> bool:
+    """Does this ``open(...)`` call write? Mode is the second positional or
+    the ``mode=`` keyword; a non-constant mode counts as writing (the rule
+    errs loud, with the inline waiver as the escape hatch)."""
+    mode = None
+    if len(node.args) >= 2:
+        mode = node.args[1]
+    else:
+        for kw in node.keywords:
+            if kw.arg == "mode":
+                mode = kw.value
+    if mode is None:
+        return False  # default mode "r"
+    if isinstance(mode, ast.Constant) and isinstance(mode.value, str):
+        return any(c in mode.value for c in "wax")
+    return True
+
+
+def _path_tokens(node: ast.AST) -> set:
+    """The static identifier/string tokens of a path expression, lowered —
+    what SPK108 matches durable/tmp keywords against."""
+    tokens = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            tokens.add(n.id.lower())
+        elif isinstance(n, ast.Attribute):
+            tokens.add(n.attr.lower())
+        elif isinstance(n, ast.Constant) and isinstance(n.value, str):
+            tokens.add(n.value.lower())
+    return tokens
 
 
 def scan_tree(src_root: str) -> List[Finding]:

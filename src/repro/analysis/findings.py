@@ -56,6 +56,12 @@ RULES: Dict[str, Rule] = {r.rule: r for r in [
          "loops) and every probe while_loop cond carries a bounded-"
          "termination guard (a comparison against the table size), so an "
          "undersized table degrades to a bounded scan instead of a hang"),
+    Rule("SPK108", "torn-write",
+         "no write-mode open() directly on a durable path (journal / spool "
+         "/ checkpoint / snapshot tokens in the path expression) — durable "
+         "bytes land on a `.tmp` sibling and arrive via os.replace, so a "
+         "crash mid-write can never leave a torn record at the real path "
+         "(the invariant the stream-service chaos cells exercise)"),
     Rule("SPKJ201", "one-sort",
          "each engine entry point lowers to its regime's exact stable-sort "
          "count (1 for the partitioned regimes; max(1, k-1) for tree) — the "

@@ -40,7 +40,7 @@ from repro.core.sparse import (PaddedCOO, make_empty, sentinel_key,
                                stable_argsort)
 
 
-def _truncate_by_magnitude(a: PaddedCOO, cap: int) -> PaddedCOO:
+def truncate_by_magnitude(a: PaddedCOO, cap: int) -> PaddedCOO:
     """Keep the ``cap`` heaviest entries (|value|); output key-sorted."""
     if cap >= a.cap:
         return a
@@ -55,6 +55,10 @@ def _truncate_by_magnitude(a: PaddedCOO, cap: int) -> PaddedCOO:
     return PaddedCOO(keys=keys[order], vals=vals[order],
                      nnz=jnp.minimum(a.nnz, valid.sum()).astype(jnp.int32),
                      shape=a.shape)
+
+
+#: back-compat alias (pre stream-service name)
+_truncate_by_magnitude = truncate_by_magnitude
 
 
 class StreamingAccumulator:
@@ -83,6 +87,12 @@ class StreamingAccumulator:
         if a.shape != self.shape:
             raise ValueError(f"stream matrices must share the shape: got "
                              f"{a.shape}, accumulator is {self.shape}")
+        if a.vals.dtype != self._sum.vals.dtype:
+            # a float64 push would silently upcast the running sum on the
+            # next flush and break the bitwise contract downstream
+            raise ValueError(f"stream matrices must share the accumulator "
+                             f"dtype: got {a.vals.dtype}, accumulator is "
+                             f"{self._sum.vals.dtype}")
         self._buffer.append(a)
         self.n_seen += 1
         if len(self._buffer) >= self.batch_k * self.window_batch:
@@ -93,8 +103,6 @@ class StreamingAccumulator:
             return
         buffered = len(self._buffer)
         windows_n = -(-buffered // self.batch_k)
-        obs.counter("streaming.flushes").inc()
-        obs.histogram("streaming.flush_size").observe(buffered)
         with obs.span("streaming.flush", buffered=buffered,
                       windows=windows_n, batch_k=self.batch_k,
                       algorithm=self.algorithm, cap_budget=self.cap_budget):
@@ -115,9 +123,15 @@ class StreamingAccumulator:
             # re-budget: keep the heaviest-by-|value| cap_budget entries
             # (exact when the true nnz fits; a documented approximation when
             # it does not)
-            self._sum = _truncate_by_magnitude(combined, self.cap_budget)
+            new_sum = truncate_by_magnitude(combined, self.cap_budget)
+        # commit point: everything below is exception-free, so a flush that
+        # raised above leaves the accumulator coherent — buffer retained for
+        # re-flush, counters still in sync with the untouched running sum
+        self._sum = new_sum
         self._buffer = []
         self.n_flushes += 1
+        obs.counter("streaming.flushes").inc()
+        obs.histogram("streaming.flush_size").observe(buffered)
 
     @property
     def value(self) -> PaddedCOO:

@@ -27,8 +27,11 @@ Regression gate
 (``benchmarks/table34_algorithms``), the sparse-allreduce collective
 bytes (``benchmarks/sparse_allreduce_bytes``), the delta-sync chaos
 soak's wire bytes per sync epoch + worst catch-up SpKAdd window
-(``benchmarks/delta_sync``), and the sliding-hash regime's modeled table
-touches + probe-chain lengths (``benchmarks/hash_accum``). For each
+(``benchmarks/delta_sync``), the sliding-hash regime's modeled table
+touches + probe-chain lengths (``benchmarks/hash_accum``), and the
+stream-service chaos cells' p99 flush latency + shed rate
+(``benchmarks/stream_service`` — simulated-clock, so deterministic per
+seed). For each
 tracked series —
 same (backend, suite, geometry, record name) — the rolling baseline is the
 median of up to ``window`` prior values; the newest value regresses when it
@@ -58,6 +61,8 @@ TRACKED_ORACLES: Tuple[str, ...] = (
     "chaos/*/catchup_window_max",   # delta_sync: worst catch-up SpKAdd k
     "hash/*/insert_loads",          # hash_accum: modeled table touches
     "hash/*/probes_per_insert",     # hash_accum: probe-chain length
+    "stream/*/p99_flush_latency",   # stream_service: simulated p99 flush
+    "stream/*/shed_rate",           # stream_service: evicted/admitted nnz
 )
 
 

@@ -1,6 +1,8 @@
 from repro.runtime.supervisor import (Supervisor, StragglerMonitor,
                                       FailureInjector)
-from repro.runtime.faults import FaultSpec, FaultyTransport, backoff_delay
+from repro.runtime.faults import (FaultSpec, FaultyTransport, InjectedCrash,
+                                  ServiceFaultInjector, ServiceFaultSpec,
+                                  backoff_delay)
 from repro.runtime.delta_sync import (CorruptFrameError, DeltaFrame,
                                       DeltaPublisher, DeltaSubscriber,
                                       DirTransport, InProcTransport,
@@ -11,7 +13,8 @@ from repro.runtime.delta_sync import (CorruptFrameError, DeltaFrame,
 
 __all__ = [
     "Supervisor", "StragglerMonitor", "FailureInjector",
-    "FaultSpec", "FaultyTransport", "backoff_delay",
+    "FaultSpec", "FaultyTransport", "InjectedCrash", "ServiceFaultInjector",
+    "ServiceFaultSpec", "backoff_delay",
     "CorruptFrameError", "DeltaFrame", "DeltaPublisher", "DeltaSubscriber",
     "DirTransport", "InProcTransport", "PublishStats", "SyncReport",
     "Transport", "apply_delta_flat", "decode_frame", "dense_sync_bytes",

@@ -1,0 +1,434 @@
+"""Multi-tenant stream service: admission, co-flush, journal recovery —
+plus the streaming-accumulator exception-safety satellites (DESIGN.md §12).
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import streaming
+from repro.core.sparse import from_dense
+from repro.core.stream_service import (REC_MAGIC, SNAP_MAGIC, StreamService,
+                                       TornRecordError, decode_journal,
+                                       encode_journal, pow2_bucket)
+from repro.core.streaming import StreamingAccumulator
+from repro.runtime.faults import (InjectedCrash, ServiceFaultInjector,
+                                  ServiceFaultSpec)
+
+
+def _sprand(rng, m, n, nnz):
+    d = np.zeros((m, n), np.float32)
+    idx = rng.choice(m * n, nnz, replace=False)
+    d.flat[idx] = rng.standard_normal(nnz)
+    return d
+
+
+def _mat(rng, shape=(16, 4), nnz=8, cap=None, dtype=jnp.float32):
+    d = _sprand(rng, *shape, nnz)
+    return from_dense(jnp.asarray(d, dtype=dtype), cap=cap or nnz)
+
+
+# ---------------------------------------------------------------------------
+# StreamingAccumulator satellites: exception safety + validation edges
+# ---------------------------------------------------------------------------
+
+def test_streaming_flush_failure_leaves_state_unchanged(monkeypatch):
+    """An engine raise mid-flush must not half-commit: buffer retained,
+    running sum / counters untouched, and the re-flush succeeds."""
+    rng = np.random.default_rng(0)
+    acc = StreamingAccumulator((16, 4), batch_k=4, cap_budget=64)
+    for _ in range(3):
+        acc.push(_mat(rng))
+    before_sum = acc._sum
+    obs.metrics.reset("streaming.")
+    before = obs.metrics.snapshot("streaming.")
+
+    def boom(*a, **k):
+        raise RuntimeError("injected engine failure")
+    monkeypatch.setattr(streaming, "spkadd_run", boom)
+    with pytest.raises(RuntimeError, match="injected engine failure"):
+        acc.flush()
+    # coherent post-failure state: nothing flushed, nothing lost
+    assert len(acc._buffer) == 3
+    assert acc.n_flushes == 0
+    assert acc._sum is before_sum
+    assert obs.metrics.snapshot("streaming.") == before
+
+    monkeypatch.undo()
+    acc.flush()  # the retry path: same buffer, now commits
+    assert acc.n_flushes == 1 and acc._buffer == []
+    assert obs.metrics.counter("streaming.flushes").value == 1
+
+
+def test_streaming_push_rejects_dtype_mismatch():
+    acc = StreamingAccumulator((16, 4), batch_k=4, cap_budget=64)
+    rng = np.random.default_rng(1)
+    with pytest.raises(ValueError, match="dtype"):
+        acc.push(_mat(rng, dtype=jnp.bfloat16))
+    assert acc.n_seen == 0 and acc._buffer == []
+
+
+def test_streaming_partial_window_and_tight_budget():
+    """Buffered count not a multiple of batch_k still sums exactly, and a
+    cap_budget smaller than one input's nnz truncates instead of raising."""
+    rng = np.random.default_rng(2)
+    m, n = 16, 4
+    acc = StreamingAccumulator((m, n), batch_k=4, cap_budget=m * n)
+    total = np.zeros((m, n), np.float32)
+    for _ in range(5):  # one full window + one buffered push
+        d = _sprand(rng, m, n, 8)
+        total += d
+        acc.push(from_dense(jnp.asarray(d), cap=8))
+    np.testing.assert_allclose(np.asarray(acc.dense()), total,
+                               rtol=1e-5, atol=1e-6)
+
+    tight = StreamingAccumulator((m, n), batch_k=2, cap_budget=4)
+    tight.push(_mat(rng, nnz=12, cap=12))
+    tight.push(_mat(rng, nnz=12, cap=12))
+    v = tight.value
+    assert int(v.nnz) <= 4  # budget enforced, heaviest entries kept
+
+
+def test_streaming_value_flushes_exactly_once():
+    rng = np.random.default_rng(3)
+    acc = StreamingAccumulator((16, 4), batch_k=8, cap_budget=64)
+    for _ in range(3):
+        acc.push(_mat(rng))
+    v1 = acc.value  # implicit flush of the partial buffer
+    assert acc.n_flushes == 1
+    v2 = acc.value  # empty buffer: no second flush, same object
+    assert acc.n_flushes == 1 and v2 is v1
+
+
+# ---------------------------------------------------------------------------
+# journal codec
+# ---------------------------------------------------------------------------
+
+def test_journal_codec_roundtrip_and_torn_rejection():
+    keys = np.arange(6, dtype=np.int32)
+    vals = np.linspace(-1, 1, 6).astype(np.float32)
+    buf = encode_journal(REC_MAGIC, {"seq": 7, "t": 1.5}, keys, vals)
+    hdr, k2, v2 = decode_journal(buf, REC_MAGIC)
+    assert hdr["seq"] == 7 and hdr["t"] == 1.5
+    np.testing.assert_array_equal(k2, keys)
+    assert v2.tobytes() == vals.tobytes()
+
+    for damage in (buf[:3],                      # torn inside the header
+                   buf[:-2],                     # torn inside the payload
+                   b"XXXX" + buf[4:],            # wrong magic
+                   buf[:-1] + bytes([buf[-1] ^ 0xFF])):  # flipped byte
+        with pytest.raises(TornRecordError):
+            decode_journal(damage, REC_MAGIC)
+    with pytest.raises(TornRecordError):
+        decode_journal(buf, SNAP_MAGIC)  # record is not a snapshot
+
+
+def test_pow2_bucket():
+    assert [pow2_bucket(c) for c in (1, 2, 3, 64, 65)] == [1, 2, 4, 64, 128]
+    with pytest.raises(ValueError):
+        pow2_bucket(0)
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_push_validates_tenant_shape_dtype():
+    svc = StreamService()
+    svc.register_tenant("a", (16, 4), cap_budget=64)
+    rng = np.random.default_rng(4)
+    with pytest.raises(ValueError, match="unknown tenant"):
+        svc.push("ghost", _mat(rng), 0.0)
+    with pytest.raises(ValueError, match="streams"):
+        svc.push("a", _mat(rng, shape=(8, 8)), 0.0)
+    with pytest.raises(ValueError, match="float"):
+        svc.push("a", _mat(rng, dtype=jnp.bfloat16), 0.0)
+    with pytest.raises(ValueError, match="already registered"):
+        svc.register_tenant("a", (16, 4), cap_budget=64)
+
+
+def test_token_bucket_rate_limits_and_refills():
+    svc = StreamService()
+    svc.register_tenant("a", (16, 4), cap_budget=64, rate=2.0, burst=1.0)
+    rng = np.random.default_rng(5)
+    assert svc.push("a", _mat(rng), now=0.0).admitted
+    v = svc.push("a", _mat(rng), now=0.1)  # bucket empty: 0.2 tokens
+    assert not v.admitted and v.reason == "rate_limited"
+    assert v.retry_after == pytest.approx((1.0 - 0.2) / 2.0)
+    assert svc.push("a", _mat(rng), now=0.6).admitted  # refilled
+    st = svc.stats()["tenants"]["a"]
+    assert st["admitted"] == 2 and st["rate_limited"] == 1
+
+
+def test_soft_watermark_defers_new_windows_with_growing_backoff():
+    svc = StreamService(soft_pending_nnz=20, hard_pending_nnz=200,
+                       backoff_base=0.05, backoff_cap=2.0,
+                       backoff_jitter=0.0)
+    svc.register_tenant("a", (16, 4), cap_budget=64, batch_k=8)
+    svc.register_tenant("b", (16, 4), cap_budget=64, batch_k=8)
+    rng = np.random.default_rng(6)
+    for t in range(3):  # 24 nnz pending: over soft, inside the grace band
+        assert svc.push("a", _mat(rng), now=float(t)).admitted
+    # "a" has an open window: continuations stay admitted up to hard
+    assert svc.push("a", _mat(rng), now=3.0).admitted
+    # "b" would open a NEW window above soft: deferred, capped-exponential
+    hints = [svc.push("b", _mat(rng), now=4.0 + i).retry_after
+             for i in range(3)]
+    assert hints == [pytest.approx(0.05), pytest.approx(0.1),
+                     pytest.approx(0.2)]
+    assert svc.stats()["tenants"]["b"]["deferred"] == 3
+
+
+def test_hard_watermark_sheds_coldest_unflushed_only():
+    svc = StreamService(soft_pending_nnz=48, hard_pending_nnz=48)
+    for t in ("cold", "warm", "hot"):
+        svc.register_tenant(t, (16, 4), cap_budget=64, batch_k=8)
+    rng = np.random.default_rng(7)
+    svc.push("cold", _mat(rng), now=0.0)   # 8 nnz, oldest activity
+    svc.push("warm", _mat(rng), now=1.0)   # 8
+    for t in range(4):                     # 32 more -> pending 48
+        assert svc.push("hot", _mat(rng), now=2.0 + t).admitted
+    # next push breaches hard (56 > 48): shed evicts coldest-first until
+    # the budget fits back under soft minus the incoming push — evicting
+    # cold alone (-> 40 <= 48 - 8) suffices, so warm survives and hot is
+    # protected as the pusher
+    v = svc.push("hot", _mat(rng), now=9.0)
+    st = svc.stats()["tenants"]
+    assert st["cold"]["evicted_windows"] == 1
+    assert st["cold"]["evicted_nnz"] == 8 and st["cold"]["buffered_nnz"] == 0
+    assert st["warm"]["evicted_windows"] == 0
+    assert st["hot"]["evicted_windows"] == 0
+    assert v.admitted and svc.pending_nnz == 48
+
+
+def test_shed_never_touches_flushed_state():
+    svc = StreamService(soft_pending_nnz=24, hard_pending_nnz=32)
+    svc.register_tenant("cold", (16, 4), cap_budget=64, batch_k=2)
+    svc.register_tenant("hot", (16, 4), cap_budget=64, batch_k=8)
+    rng = np.random.default_rng(8)
+    d1, d2 = _sprand(rng, 16, 4, 8), _sprand(rng, 16, 4, 8)
+    svc.push("cold", from_dense(jnp.asarray(d1), cap=8), now=0.0)
+    svc.push("cold", from_dense(jnp.asarray(d2), cap=8), now=0.1)
+    svc.drain(0.2)  # cold's window flushed into its running sum
+    svc.push("cold", _mat(rng), now=0.3)  # one unflushed push remains
+    for t in range(3):
+        svc.push("hot", _mat(rng), now=1.0 + t)
+    svc.push("hot", _mat(rng), now=4.0)  # breaches hard: sheds cold
+    st = svc.stats()["tenants"]["cold"]
+    assert st["evicted_nnz"] == 8 and st["buffered_nnz"] == 0
+    np.testing.assert_allclose(np.asarray(svc.dense("cold")), d1 + d2,
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# co-flush scheduler
+# ---------------------------------------------------------------------------
+
+def test_bucket_coflush_single_engine_call_and_exact_sums():
+    svc = StreamService(flush_deadline=0.5)
+    for t in ("a", "b"):  # same shape, caps 60 and 64 -> same pow2 bucket
+        svc.register_tenant(t, (16, 4), cap_budget=60 if t == "a" else 64,
+                            batch_k=2)
+    assert len(svc.stats()["buckets"]) == 1
+    rng = np.random.default_rng(9)
+    totals = {"a": np.zeros((16, 4), np.float32),
+              "b": np.zeros((16, 4), np.float32)}
+    for t in ("a", "b"):
+        for i in range(2):  # one sealed window each
+            d = _sprand(rng, 16, 4, 8)
+            totals[t] += d
+            svc.push(t, from_dense(jnp.asarray(d), cap=8), now=0.1 * i)
+    before = obs.metrics.counter("engine.ragged.calls").value
+    reports = svc.tick(now=1.0)  # past the deadline: both tenants co-flush
+    assert obs.metrics.counter("engine.ragged.calls").value == before + 1
+    assert len(reports) == 1 and reports[0].tenants == 2
+    for t in ("a", "b"):
+        np.testing.assert_allclose(np.asarray(svc.dense(t)), totals[t],
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_tick_respects_deadline_and_bucket_full():
+    svc = StreamService(flush_deadline=1.0, max_coflush_windows=2)
+    svc.register_tenant("a", (16, 4), cap_budget=64, batch_k=1)
+    rng = np.random.default_rng(10)
+    svc.push("a", _mat(rng), now=0.0)  # batch_k=1: seals immediately
+    assert svc.tick(now=0.5) == []     # young window, bucket not full
+    svc.push("a", _mat(rng), now=0.6)  # second sealed window: bucket full
+    reports = svc.tick(now=0.7)
+    assert len(reports) == 1 and reports[0].windows == 2
+    svc.push("a", _mat(rng), now=1.0)
+    assert svc.tick(now=1.5) == []          # deadline not reached
+    assert len(svc.tick(now=2.1)) == 1      # deadline flush
+    assert svc.flush_latencies[-1] == pytest.approx(1.1)
+
+
+def test_value_reads_flushed_state_only():
+    svc = StreamService()
+    svc.register_tenant("a", (16, 4), cap_budget=64, batch_k=8)
+    rng = np.random.default_rng(11)
+    d = _sprand(rng, 16, 4, 8)
+    svc.push("a", from_dense(jnp.asarray(d), cap=8), now=0.0)
+    assert int(svc.value("a").nnz) == 0  # buffered, not flushed
+    svc.drain(1.0)
+    np.testing.assert_allclose(np.asarray(svc.dense("a")), d,
+                               rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# journal + recovery
+# ---------------------------------------------------------------------------
+
+def _service(root, **kw):
+    kw.setdefault("flush_deadline", 0.5)
+    return StreamService(journal_root=root, **kw)
+
+
+def test_journal_replay_restores_unflushed_windows(tmp_path):
+    root = str(tmp_path / "j")
+    svc = _service(root)
+    svc.register_tenant("a", (16, 4), cap_budget=64, batch_k=2)
+    rng = np.random.default_rng(12)
+    ds = [_sprand(rng, 16, 4, 8) for _ in range(3)]
+    for i, d in enumerate(ds):  # one sealed + one open window, no flush
+        svc.push("a", from_dense(jnp.asarray(d), cap=8), now=0.1 * i)
+
+    fresh = _service(root)
+    replayed = fresh.register_tenant("a", (16, 4), cap_budget=64, batch_k=2)
+    assert replayed == 3
+    assert fresh.pending_nnz == svc.pending_nnz == 24
+    fresh.drain(1.0)
+    np.testing.assert_allclose(np.asarray(fresh.dense("a")), sum(ds),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_flushed_records_never_replay_twice(tmp_path):
+    """Exactly-once: after a flush + snapshot, a restart replays nothing
+    and reproduces the running sum bitwise."""
+    root = str(tmp_path / "j")
+    svc = _service(root)
+    svc.register_tenant("a", (16, 4), cap_budget=64, batch_k=2)
+    rng = np.random.default_rng(13)
+    for i in range(2):
+        svc.push("a", _mat(rng), now=0.1 * i)
+    svc.drain(1.0)
+    before = svc.value("a")
+
+    fresh = _service(root)
+    assert fresh.register_tenant("a", (16, 4), cap_budget=64,
+                                 batch_k=2) == 0
+    after = fresh.value("a")
+    assert np.asarray(after.keys).tobytes() == \
+        np.asarray(before.keys).tobytes()
+    assert np.asarray(after.vals).tobytes() == \
+        np.asarray(before.vals).tobytes()
+    assert int(after.nnz) == int(before.nnz)
+    st = fresh.stats()["tenants"]["a"]
+    assert st["flushes"] == 1 and st["seen"] == 2
+    # and the consumed record files are gone from disk
+    recs = [f for f in os.listdir(os.path.join(root, "a"))
+            if f.startswith("rec_")]
+    assert recs == []
+
+
+def test_torn_journal_record_quarantined(tmp_path):
+    root = str(tmp_path / "j")
+    svc = _service(root)
+    svc.register_tenant("a", (16, 4), cap_budget=64, batch_k=4)
+    rng = np.random.default_rng(14)
+    for i in range(3):
+        svc.push("a", _mat(rng), now=0.1 * i)
+    # tear the middle record the way a crash mid-write would
+    victim = os.path.join(root, "a", "rec_00000001.bin")
+    with open(victim, "rb") as f:
+        buf = f.read()
+    with open(victim + ".tmp", "wb") as f:
+        f.write(buf[:len(buf) // 2])
+    os.replace(victim + ".tmp", victim)
+
+    fresh = _service(root)
+    replayed = fresh.register_tenant("a", (16, 4), cap_budget=64, batch_k=4)
+    st = fresh.stats()["tenants"]["a"]
+    assert replayed == 2 and st["quarantined_records"] == 1
+    qdir = os.path.join(root, "a", "quarantine")
+    assert os.listdir(qdir) == ["rec_00000001.bin"]
+    fresh.drain(1.0)  # still serving
+
+
+def test_mid_flush_crash_recovers_bitwise(tmp_path):
+    """Crash after the engine computed the co-flush but before commit:
+    recovery + re-flush equals the uninterrupted run bitwise."""
+    rng_seed = 15
+    shape, cap, batch_k = (16, 4), 64, 2
+
+    def feed(svc):
+        rng = np.random.default_rng(rng_seed)
+        for i in range(4):
+            svc.push("a", _mat(rng), now=0.1 * i)
+
+    ref = _service(str(tmp_path / "ref"))
+    ref.register_tenant("a", shape, cap_budget=cap, batch_k=batch_k)
+    feed(ref)
+    ref.drain(1.0)
+
+    inj = ServiceFaultInjector(ServiceFaultSpec(crash_at_flush=(1,)))
+    crash = _service(str(tmp_path / "crash"), fault_injector=inj)
+    crash.register_tenant("a", shape, cap_budget=cap, batch_k=batch_k)
+    feed(crash)
+    with pytest.raises(InjectedCrash):
+        crash.drain(1.0)
+
+    rec = _service(str(tmp_path / "crash"))
+    assert rec.register_tenant("a", shape, cap_budget=cap,
+                               batch_k=batch_k) == 4
+    rec.drain(1.0)  # the flush the crash swallowed, re-run
+    a, b = ref.value("a"), rec.value("a")
+    assert np.asarray(a.keys).tobytes() == np.asarray(b.keys).tobytes()
+    assert np.asarray(a.vals).tobytes() == np.asarray(b.vals).tobytes()
+    assert int(a.nnz) == int(b.nnz)
+
+
+def test_eviction_removes_journal_records(tmp_path):
+    """Shed windows cannot resurrect at recovery: their records go too."""
+    root = str(tmp_path / "j")
+    svc = _service(root, soft_pending_nnz=24, hard_pending_nnz=32)
+    svc.register_tenant("cold", (16, 4), cap_budget=64, batch_k=8)
+    svc.register_tenant("hot", (16, 4), cap_budget=64, batch_k=8)
+    rng = np.random.default_rng(16)
+    svc.push("cold", _mat(rng), now=0.0)
+    for t in range(3):
+        svc.push("hot", _mat(rng), now=1.0 + t)
+    svc.push("hot", _mat(rng), now=4.0)  # breaches hard: cold shed
+    assert svc.stats()["tenants"]["cold"]["evicted_windows"] == 1
+
+    fresh = _service(root)
+    assert fresh.register_tenant("cold", (16, 4), cap_budget=64,
+                                 batch_k=8) == 0  # nothing to resurrect
+    assert fresh.register_tenant("hot", (16, 4), cap_budget=64,
+                                 batch_k=8) == 4
+
+
+def test_buffer_pool_shares_empties_across_tenants():
+    svc = StreamService()
+    obs.metrics.reset("stream_service.pool.")
+    svc.register_tenant("a", (16, 4), cap_budget=64)
+    svc.register_tenant("b", (16, 4), cap_budget=64)  # same class: pool hit
+    svc.register_tenant("c", (32, 4), cap_budget=64)  # new class: miss
+    assert obs.metrics.counter("stream_service.pool.hit").value == 1
+    assert obs.metrics.counter("stream_service.pool.miss").value == 2
+    assert svc.value("a") is svc.value("b")
+
+
+def test_register_validates_arguments():
+    svc = StreamService()
+    with pytest.raises(ValueError, match="tenant id"):
+        svc.register_tenant("bad/../name", (16, 4), cap_budget=64)
+    with pytest.raises(ValueError, match="batch_k"):
+        svc.register_tenant("a", (16, 4), cap_budget=64, batch_k=0)
+    with pytest.raises(ValueError, match="rate"):
+        svc.register_tenant("a", (16, 4), cap_budget=64, rate=0.0)
+    with pytest.raises(ValueError, match="watermarks"):
+        StreamService(soft_pending_nnz=10, hard_pending_nnz=5)
+    with pytest.raises(ValueError, match="flush_deadline"):
+        StreamService(flush_deadline=0.0)
